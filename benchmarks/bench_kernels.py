@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: block-sparse SpMM and flash attention (interpret
+mode on CPU — correctness + tile statistics; wall numbers are CPU-only)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.gcn_spmm import TILE, build_tiles, tile_density
+from repro.kernels import ops
+from repro.kernels.ref import mha_ref
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    # SpMM on a real partition shard
+    from repro.data import GraphDataPipeline
+    pipeline = GraphDataPipeline.build("tiny", 2, kind="gcn")
+    pg = pipeline.pg
+    row = pg.edge_row[0].astype(np.int64)
+    col = pg.edge_col[0].astype(np.int64)
+    w = pg.edge_w[0]
+    combined = pg.max_inner + pg.num_parts * pg.slot
+    cpad = -(-combined // TILE) * TILE
+    rpad = -(-pg.max_inner // TILE) * TILE
+    h = jnp.asarray(rng.normal(size=(cpad, 128)), jnp.float32)
+    tr, tc, tv = build_tiles((row, col, w), pg.max_inner, combined)
+    t = time_fn(lambda: ops.spmm(jnp.asarray(tr), jnp.asarray(tc),
+                                 jnp.asarray(tv), h, rpad), iters=2)
+    dens = tile_density(tr, pg.max_inner, combined)
+    flops = 2 * len(tr) * TILE * TILE * 128
+    emit("kernels/gcn_spmm/tiny_p0", t * 1e6,
+         f"tiles={len(tr)},tile_density={dens:.3f},gflop={flops / 1e9:.2f}")
+
+    # flash attention vs ref
+    B, S, H, d = 1, 512, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    t = time_fn(lambda: ops.attention(q, q, q, causal=True,
+                                      q_block=128, kv_block=128), iters=2)
+    err = float(jnp.abs(ops.attention(q, q, q, causal=True, q_block=128,
+                                      kv_block=128)
+                        - mha_ref(q, q, q, causal=True)).max())
+    emit("kernels/flash_attention/512x4x64", t * 1e6, f"max_err={err:.2e}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Tab. 5 + Appendix E — multi-server scaling (ogbn-papers100M,
+32 partitions over 10GbE): PipeGCN cuts communication ~60% and total epoch
+time ~35-40% vs vanilla. Measured shard stats + Ethernet hardware model.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PAPER_ETH, calibrate_link_bw, emit, epoch_model
+from repro.core.config import ModelConfig
+from repro.data import GraphDataPipeline
+from repro.graph.synthetic import model_template
+
+# The paper measures comm at 63% of epoch time on the real 111M-node graph
+# (Tab. 5: 6.6s / 10.5s). The 32K-node simulation has a much larger relative
+# cut, so the Ethernet bandwidth is calibrated to reproduce the measured
+# *vanilla* comm ratio; the PipeGCN reductions below are then predictions of
+# the schedule model, compared against the paper's 0.62×/0.39× (see
+# EXPERIMENTS.md).
+PAPER_COMM_RATIO = 0.63
+
+
+def run(quick: bool = False, parts: int = 32):
+    name = "papers100m-sim"
+    if quick:
+        parts = 8
+    pipeline = GraphDataPipeline.build(name, parts, kind="sage")
+    tpl = model_template(name)
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=tpl["hidden"], num_layers=tpl["num_layers"],
+                     num_classes=pipeline.dataset.num_classes)
+    hw = calibrate_link_bw(pipeline.pg, mc, PAPER_ETH, PAPER_COMM_RATIO)
+    m = epoch_model(pipeline.pg, mc, hw)
+    # Tab. 5 layout: total and communication, normalized to vanilla
+    total_rel = m.t_pipegcn / m.t_vanilla
+    # in the pipelined schedule the *exposed* communication is what exceeds
+    # compute per layer
+    exposed = m.t_pipegcn - m.t_comp - m.t_reduce
+    comm_rel = max(exposed, 0.0) / max(m.t_comm, 1e-12)
+    emit(f"table5/{name}/p{parts}/vanilla", m.t_vanilla * 1e6,
+         f"total=1.00,comm=1.00,comm_ratio={m.comm_ratio:.2f}")
+    emit(f"table5/{name}/p{parts}/pipegcn", m.t_pipegcn * 1e6,
+         f"total={total_rel:.2f},comm={comm_rel:.2f}")
+    # paper band: total 0.62-0.64, comm 0.39-0.42 at comm ratio ~63%
+    return {"total_rel": total_rel, "comm_rel": comm_rel,
+            "comm_ratio": m.comm_ratio}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,74 @@
+"""Paper Fig. 3 + Tab. 4 (throughput columns) — PipeGCN speedup over vanilla
+partition-parallel training.
+
+Two views:
+  (a) schedule-analytic speedup on the paper's hardware model (measured
+      boundary bytes + FLOPs of the real shards) — expect the paper's
+      1.7×–2.2× band where comm ratio is 60–85 %;
+  (b) measured epochs/s of the actual jitted JAX step on this CPU (no real
+      interconnect, so (b) validates step cost parity, not overlap).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import PAPER_GPU, emit, epoch_model, time_fn
+from repro.core import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN
+from repro.core.trainer import make_jitted_train_step
+from repro.data import GraphDataPipeline
+from repro.graph.synthetic import model_template
+from repro.optim import adam
+
+CASES = [("reddit-sim", 2), ("reddit-sim", 4),
+         ("products-sim", 5), ("products-sim", 10),
+         ("yelp-sim", 3), ("yelp-sim", 6)]
+
+
+def run(quick: bool = False):
+    cases = CASES[:2] if quick else CASES
+    out = []
+    for name, parts in cases:
+        pipeline = GraphDataPipeline.build(name, parts, kind="sage")
+        tpl = model_template(name)
+        mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                         hidden=tpl["hidden"], num_layers=tpl["num_layers"],
+                         num_classes=pipeline.dataset.num_classes,
+                         dropout=0.0)
+        m = epoch_model(pipeline.pg, mc, PAPER_GPU)
+        emit(f"fig3/speedup_model/{name}/p{parts}", m.t_vanilla * 1e6,
+             f"pipegcn_speedup={m.speedup:.2f}x,comm_ratio={m.comm_ratio:.2f}")
+
+        # measured per-step wall time of both variants (cost parity on CPU)
+        wall = {}
+        for variant in ("vanilla", "pipegcn"):
+            model = PipeGCN(mc, PipeConfig.named(variant))
+            opt = adam(1e-2)
+            params = model.init_params(jax.random.PRNGKey(0))
+            bufs = model.init_buffers(pipeline.topo)
+            state = opt.init(params)
+            step = make_jitted_train_step(model, opt)
+            key = jax.random.PRNGKey(1)
+            iters = 3 if quick else 5
+            # warmup (buffers are donated: thread them through)
+            loss, params, state, bufs = step(pipeline.topo, params, state,
+                                             bufs, pipeline.train_data, key)
+            jax.block_until_ready(loss)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                loss, params, state, bufs = step(pipeline.topo, params,
+                                                 state, bufs,
+                                                 pipeline.train_data, key)
+            jax.block_until_ready(loss)
+            t = (time.perf_counter() - t0) / iters
+            wall[variant] = t
+            emit(f"fig3/measured_step/{name}/p{parts}/{variant}", t * 1e6,
+                 f"epochs_per_s={1.0 / t:.2f}")
+        out.append((name, parts, m.speedup, wall))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (results/dryrun_*.json):
+per (arch × shape × mesh): three roofline terms, dominant bottleneck,
+MODEL_FLOPS ratio, bytes/device. Also emits the markdown for
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(mesh: str):
+    path = os.path.join(RESULTS, f"dryrun_{mesh}.json")
+    if not os.path.exists(path):
+        return []
+    return [r for r in json.load(open(path)) if "error" not in r]
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}µs"
+
+
+def run(quick: bool = False, markdown: bool = False):
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            rows.append(r)
+            if not markdown:
+                emit(f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                     r.get("t_compute", 0) * 1e6,
+                     f"bottleneck={r.get('bottleneck')},"
+                     f"t_mem_us={r.get('t_memory', 0) * 1e6:.1f},"
+                     f"t_coll_us={r.get('t_collective', 0) * 1e6:.1f},"
+                     f"mf_ratio={r.get('model_flops_ratio', 0):.3f}")
+    if markdown:
+        print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+              " bottleneck | MODEL/HLO flops | bytes/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']}"
+                  f"{'*' if r.get('variant') else ''} | {r['mesh']} | "
+                  f"{fmt_s(r.get('t_compute', 0))} | "
+                  f"{fmt_s(r.get('t_memory', 0))} | "
+                  f"{fmt_s(r.get('t_collective', 0))} | "
+                  f"{r.get('bottleneck')} | "
+                  f"{r.get('model_flops_ratio', 0):.3f} | "
+                  f"{r.get('bytes_per_device', 0) / 2**30:.2f} GiB |")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(markdown="--markdown" in sys.argv)

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+``python -m benchmarks.run`` runs the quick variants; ``--full`` runs the
+paper-scale versions (minutes on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: comm_ratio,throughput,accuracy,error,"
+                         "gamma,scale,breakdown,rate,kernels,roofline")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (bench_accuracy, bench_breakdown, bench_comm_ratio,
+                            bench_convergence, bench_error, bench_gamma,
+                            bench_kernels, bench_rate, bench_scale,
+                            bench_throughput, roofline)
+    table = {
+        "comm_ratio": bench_comm_ratio.run,      # Tab. 2
+        "throughput": bench_throughput.run,      # Fig. 3 / Tab. 4 (thpt)
+        "accuracy": bench_accuracy.run,          # Tab. 4 (scores)
+        "convergence": bench_convergence.run,    # Fig. 4 / 9 (+ k ablation)
+        "error": bench_error.run,                # Fig. 5 / 7
+        "gamma": bench_gamma.run,                # Fig. 6
+        "scale": bench_scale.run,                # Tab. 5 / App. E
+        "breakdown": bench_breakdown.run,        # Tab. 6 / Fig. 8 / App. C
+        "rate": bench_rate.run,                  # Thm. 3.1 / Cor. A.10
+        "kernels": bench_kernels.run,            # Pallas kernels
+        "roofline": roofline.run,                # §Roofline from dry-run
+    }
+    only = set(args.only.split(",")) if args.only else set(table)
+    failures = 0
+    for name, fn in table.items():
+        if name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(quick=quick)
+            print(f"# bench {name}: done in {time.perf_counter() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"# bench {name}: FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""The deployable SPMD path end-to-end: PipeGCN under `jax.shard_map` with
+one graph partition per device (8 forced host devices standing in for
+chips), boundary exchange via `all_to_all`, Adam training, and a final
+equality check against the single-device sim backend.
+
+    PYTHONPATH=src python examples/pipegcn_spmd.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN
+from repro.data import GraphDataPipeline
+from repro.optim import adam
+
+PARTS = 8
+EPOCHS = 60
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    pipeline = GraphDataPipeline.build("tiny", num_parts=PARTS, kind="sage")
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=32, num_layers=2,
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+    model = PipeGCN(mc, PipeConfig.named("pipegcn-gf", gamma=0.5))
+    topo = pipeline.topo
+
+    mesh = jax.make_mesh((PARTS,), ("parts",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    spmd_step = model.make_spmd_step(mesh, topo, "parts")
+
+    opt = adam(0.01)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    bufs = model.init_buffers(topo)
+    bufs_sim = model.init_buffers(topo)
+    params_sim, opt_sim = params, opt_state
+
+    for epoch in range(EPOCHS):
+        key = jax.random.PRNGKey(epoch)
+        loss, _, grads, bufs = spmd_step(topo, params, bufs,
+                                         pipeline.train_data, key)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        # sim backend in lockstep (verification)
+        loss_s, grads_s, bufs_sim, _ = model.train_step(
+            topo, params_sim, bufs_sim, pipeline.train_data, key)
+        params_sim, opt_sim = opt.apply(params_sim, grads_s, opt_sim)
+        if epoch % 20 == 0:
+            print(f"epoch {epoch:3d} loss {float(loss):.4f} "
+                  f"(sim {float(loss_s):.4f})")
+
+    drift = max(float(jnp.abs(a - b).max())
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params_sim)))
+    _, logits = model.forward(topo, params, pipeline.val_data)
+    metrics = pipeline.metric(logits)
+    print(f"final: test={metrics['test']:.4f} val={metrics['val']:.4f} "
+          f"spmd-vs-sim param drift={drift:.2e}")
+    assert drift < 1e-4, "SPMD and sim backends diverged"
+    print("SPMD == sim across full training  OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Batched serving example: prefill + decode with a KV cache on a reduced
+assigned architecture (works for all 10 ids).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-8b
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-780m
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    out = serve(args.arch, reduced=True, batch_size=args.batch,
+                prompt_len=args.prompt_len, gen_tokens=args.gen,
+                temperature=0.8)
+    for k, v in out.items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis.cost import analytic_cost
+
+__all__ = ["analytic_cost"]

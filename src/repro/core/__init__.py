@@ -1,0 +1,12 @@
+"""PipeGCN core: the paper's contribution as a composable JAX module."""
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import (PipeGCN, ShardedData, Topology,
+                                SimBackend, SpmdBackend,
+                                shard_data, topology_from)
+from repro.core.module import make_pipegcn_loss
+from repro.core.trainer import TrainResult, make_jitted_train_step, train_pipegcn
+
+__all__ = ["ModelConfig", "PipeConfig", "PipeGCN", "ShardedData", "Topology",
+           "SimBackend", "SpmdBackend", "shard_data", "topology_from",
+           "TrainResult", "make_jitted_train_step", "train_pipegcn",
+           "make_pipegcn_loss"]

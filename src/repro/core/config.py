@@ -1,0 +1,66 @@
+"""Configuration dataclasses for the PipeGCN core."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """GCN / GraphSAGE model per the paper (§2, Tab. 3)."""
+
+    kind: str = "sage"             # "gcn" (σ(PHW)) or "sage" (σ([PH; H]W))
+    feat_dim: int = 128
+    hidden: int = 256
+    num_layers: int = 4
+    num_classes: int = 16
+    dropout: float = 0.5
+    multilabel: bool = False       # sigmoid BCE (Yelp) vs softmax CE
+
+    def layer_dims(self) -> list[tuple[int, int]]:
+        """[(fan_in_of_aggregated, fan_out)] per layer (pre-concat dims)."""
+        dims = [self.feat_dim] + [self.hidden] * (self.num_layers - 1) + [self.num_classes]
+        return [(dims[i], dims[i + 1]) for i in range(self.num_layers)]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeConfig:
+    """Staleness / smoothing switches.
+
+    stale=False                       -> vanilla partition-parallel training
+    stale=True                        -> PipeGCN
+    stale=True + smooth_grad (γ)      -> PipeGCN-G
+    stale=True + smooth_feat (γ)      -> PipeGCN-F
+    stale=True + both                 -> PipeGCN-GF
+    """
+
+    stale: bool = True
+    smooth_feat: bool = False
+    smooth_grad: bool = False
+    gamma: float = 0.95            # paper default decay rate
+    # Beyond-paper (App. C direction): compress boundary payloads to bf16
+    # on the wire; accumulation stays f32. Halves the collective bytes.
+    compress_boundary: bool = False
+    # Beyond-paper (App. C "increase the pipeline depth" future work):
+    # consume boundary data from k iterations ago — k-1 extra iterations of
+    # compute available to hide one exchange. k=1 is the paper's PipeGCN.
+    staleness_steps: int = 1
+
+    @staticmethod
+    def vanilla() -> "PipeConfig":
+        return PipeConfig(stale=False)
+
+    @staticmethod
+    def named(name: str, gamma: float = 0.95) -> "PipeConfig":
+        name = name.lower()
+        table = {
+            "gcn": PipeConfig(stale=False),
+            "vanilla": PipeConfig(stale=False),
+            "pipegcn": PipeConfig(stale=True),
+            "pipegcn-g": PipeConfig(stale=True, smooth_grad=True, gamma=gamma),
+            "pipegcn-f": PipeConfig(stale=True, smooth_feat=True, gamma=gamma),
+            "pipegcn-gf": PipeConfig(stale=True, smooth_feat=True,
+                                     smooth_grad=True, gamma=gamma),
+        }
+        if name not in table:
+            raise KeyError(f"unknown variant {name!r}; have {sorted(table)}")
+        return table[name]

@@ -1,0 +1,48 @@
+"""Composable `jax.grad`-compatible wrapper around the PipeGCN step.
+
+The hand-written Alg. 1 backward cannot be derived by autodiff (stale
+gradient routing), but it can be *packaged* as a `jax.custom_vjp` so the
+pipelined loss composes with standard JAX training code:
+
+    loss_fn = make_pipegcn_loss(model, topo)
+    (loss, new_buffers), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, buffers, data, key)
+
+The VJP w.r.t. `params` is exactly the Alg. 1 gradient (computed in the
+forward pass and replayed in the backward); buffers/data/key receive zero
+cotangents (pipeline state is non-differentiable by the paper's semantics).
+Cotangent scaling is honored, so this also composes under outer losses of
+the form `g(loss_fn(...))`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipegcn import PipeGCN, Topology
+
+
+def make_pipegcn_loss(model: PipeGCN, topo: Topology):
+    """Returns loss_fn(params, buffers, data, key) -> (loss, new_buffers),
+    differentiable w.r.t. params via the Alg. 1 manual backward."""
+
+    @jax.custom_vjp
+    def loss_fn(params, buffers, data, key):
+        loss, _, _, new_buffers = model.train_step(topo, params, buffers,
+                                                   data, key)
+        return loss, new_buffers
+
+    def fwd(params, buffers, data, key):
+        loss, grads, new_buffers, _ = model.train_step(topo, params, buffers,
+                                                       data, key)
+        return (loss, new_buffers), (grads, buffers)
+
+    def bwd(residual, cotangents):
+        grads, buffers = residual
+        ct_loss, _ct_buffers = cotangents
+        d_params = jax.tree.map(lambda g: g * ct_loss, grads)
+        d_buffers = jax.tree.map(jnp.zeros_like, buffers)
+        return d_params, d_buffers, None, None
+
+    loss_fn.defvjp(fwd, bwd)
+    return loss_fn

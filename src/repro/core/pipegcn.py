@@ -1,0 +1,514 @@
+"""PipeGCN core: partition-parallel full-graph GCN training with pipelined
+(one-iteration-deferred) boundary feature / feature-gradient communication,
+per the paper's Alg. 1 and Eq. 3–4, plus the §3.4 EMA smoothing.
+
+Design notes
+------------
+* Staleness in feature *gradients* breaks `jax.grad` semantics (a cotangent
+  produced at iteration t must be applied at t+1 on a different device), so —
+  exactly like the paper's Alg. 1 — the backward pass is written by hand.
+  With ``PipeConfig.vanilla()`` the same code performs synchronous exchanges
+  and is verified against ``jax.grad`` of a pure forward to float64 tolerance.
+
+* One implementation, two backends:
+    - ``sim``  : partitions as a leading axis; exchange = transpose. 1 device.
+    - ``spmd`` : runs inside ``jax.shard_map``; exchange = ``lax.all_to_all``.
+  The layer math is shared; only the 4 sync points differ (feature exchange,
+  gradient exchange, weight-grad reduce, loss reduce).
+
+* Pipeline state (the "stale buffers") is explicit and threaded through the
+  step function — this is what makes the deferred collectives free of data
+  dependence on current-iteration compute (the XLA scheduler can overlap
+  them, which is the TPU-native analogue of the paper's second cudaStream).
+
+State layout (per layer ℓ = 1..L; widths follow the layer inputs):
+  feat_buf[ℓ] : (P*slot, F_{ℓ-1})  stale boundary features   (Eq. 3 h^(t-1))
+  grad_buf[ℓ] : (max_inner, F_{ℓ-1}) stale boundary-gradient contributions,
+                already exchanged+scattered to owner rows    (Eq. 4 δ^(t-1))
+With smoothing on, the same buffers hold the EMA (γ·old + (1−γ)·fresh);
+receiver-side EMA is equivalent to the paper's per-node EMA because the
+exchange+scatter is a fixed linear map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.graph.halo import PartitionedGraph
+
+
+class Topology(NamedTuple):
+    """Device-ready padded partition topology (leading axis = partition)."""
+
+    edge_row: jax.Array    # (P, max_nnz) int32
+    edge_col: jax.Array    # (P, max_nnz) int32 (combined-array columns)
+    edge_w: jax.Array      # (P, max_nnz) f32
+    send_idx: jax.Array    # (P, P, slot) int32
+    send_mask: jax.Array   # (P, P, slot) bool
+    inner_mask: jax.Array  # (P, max_inner) bool
+
+    @property
+    def num_parts(self) -> int:
+        # peer axis: works both with ((P), P, slot) and squeezed (P, slot)
+        return self.send_idx.shape[-2]
+
+    @property
+    def max_inner(self) -> int:
+        return self.inner_mask.shape[-1]
+
+    @property
+    def slot(self) -> int:
+        return self.send_idx.shape[-1]
+
+    @property
+    def halo_size(self) -> int:
+        return self.num_parts * self.slot
+
+
+class ShardedData(NamedTuple):
+    """Per-partition node data (leading axis = partition)."""
+
+    x: jax.Array           # (P, max_inner, F)
+    labels: jax.Array      # (P, max_inner) int32 or (P, max_inner, C) f32
+    train_mask: jax.Array  # (P, max_inner) bool
+    eval_mask: jax.Array   # (P, max_inner) bool (val or test)
+
+
+def topology_from(pg: PartitionedGraph) -> Topology:
+    return Topology(
+        edge_row=jnp.asarray(pg.edge_row), edge_col=jnp.asarray(pg.edge_col),
+        edge_w=jnp.asarray(pg.edge_w), send_idx=jnp.asarray(pg.send_idx),
+        send_mask=jnp.asarray(pg.send_mask),
+        inner_mask=jnp.asarray(pg.inner_mask))
+
+
+def shard_data(pg: PartitionedGraph, x, labels, train_mask, eval_mask) -> ShardedData:
+    return ShardedData(
+        x=jnp.asarray(pg.pack_nodes(np.asarray(x, np.float32))),
+        labels=jnp.asarray(pg.pack_nodes(np.asarray(labels))),
+        train_mask=jnp.asarray(pg.pack_nodes(np.asarray(train_mask))),
+        eval_mask=jnp.asarray(pg.pack_nodes(np.asarray(eval_mask))))
+
+
+# ----------------------------------------------------------------------
+# Per-partition primitives (no partition axis; sim backend vmaps them).
+# ----------------------------------------------------------------------
+
+def _spmm(edge_row, edge_col, edge_w, comb, max_inner):
+    """z = P_local · comb  where comb = [H_inner ; B_halo]."""
+    vals = comb[edge_col] * edge_w[:, None]
+    return jax.ops.segment_sum(vals, edge_row, num_segments=max_inner)
+
+
+def _spmm_t(edge_row, edge_col, edge_w, dz, combined):
+    """Transpose: δcomb = P_localᵀ · δz."""
+    vals = dz[edge_row] * edge_w[:, None]
+    return jax.ops.segment_sum(vals, edge_col, num_segments=combined)
+
+
+def _gather_send(h, send_idx, send_mask):
+    """(max_inner,F) -> (P, slot, F) payload for each peer."""
+    p, slot = send_idx.shape
+    out = h[send_idx.reshape(-1)].reshape(p, slot, -1)
+    return jnp.where(send_mask[..., None], out, 0.0)
+
+
+def _scatter_recv(contrib, send_idx, send_mask, max_inner):
+    """(P, slot, F) received gradient blocks -> (max_inner, F) scatter-add."""
+    p, slot, f = contrib.shape
+    contrib = jnp.where(send_mask[..., None], contrib, 0.0)
+    flat_idx = send_idx.reshape(-1)
+    return jnp.zeros((max_inner, f), contrib.dtype).at[flat_idx].add(
+        contrib.reshape(p * slot, f))
+
+
+# ----------------------------------------------------------------------
+# Backends: the four sync points.
+# ----------------------------------------------------------------------
+
+class SimBackend:
+    """Partitions as leading axis on a single device."""
+
+    is_spmd = False
+
+    def pmap(self, f):
+        return jax.vmap(f)
+
+    def exchange(self, s):
+        # s: (P_dev, P_peer, slot, F); R[i, j] = S[j, i]
+        return jnp.swapaxes(s, 0, 1)
+
+    def psum(self, x):
+        return jnp.sum(x, axis=0)
+
+    def pmean_scalar(self, num, den):
+        return jnp.sum(num) / jnp.maximum(jnp.sum(den), 1.0)
+
+    def dropout_mask(self, key, rate, shape_per_part, num_parts):
+        shape = (num_parts,) + tuple(shape_per_part)
+        keep = jax.random.bernoulli(key, 1.0 - rate, shape)
+        return keep.astype(jnp.float32) / (1.0 - rate)
+
+
+class SpmdBackend:
+    """Runs inside shard_map over `axis_name` (a mesh axis or tuple of axes
+    — the production mesh flattens ("data","model") into the partition
+    axis); one partition per device."""
+
+    is_spmd = True
+
+    def __init__(self, axis_name="parts"):
+        self.axis_name = axis_name
+
+    def pmap(self, f):
+        return f
+
+    def exchange(self, s):
+        # s: (P, slot, F) per device
+        return jax.lax.all_to_all(s, self.axis_name, 0, 0, tiled=True)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis_name)
+
+    def pmean_scalar(self, num, den):
+        return (jax.lax.psum(num, self.axis_name)
+                / jnp.maximum(jax.lax.psum(den, self.axis_name), 1.0))
+
+    def dropout_mask(self, key, rate, shape_per_part, num_parts):
+        key = jax.random.fold_in(key, jax.lax.axis_index(self.axis_name))
+        keep = jax.random.bernoulli(key, 1.0 - rate, tuple(shape_per_part))
+        return keep.astype(jnp.float32) / (1.0 - rate)
+
+
+# ----------------------------------------------------------------------
+# Losses (masked, globally normalized).
+# ----------------------------------------------------------------------
+
+def _ce_loss_and_grad(logits, labels, mask, total, backend):
+    """Masked softmax cross-entropy; returns (local_sum, dlogits)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    loss_local = jnp.sum((lse - ll) * mask)
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (probs - onehot) * mask[..., None] / total
+    return loss_local, dlogits
+
+
+def _bce_loss_and_grad(logits, labels, mask, total, backend):
+    """Masked multi-label sigmoid BCE (Yelp-style); total counts node·class."""
+    z, y = logits, labels.astype(logits.dtype)
+    per = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    loss_local = jnp.sum(per * mask[..., None])
+    dlogits = (jax.nn.sigmoid(z) - y) * mask[..., None] / total
+    return loss_local, dlogits
+
+
+# ----------------------------------------------------------------------
+# The module.
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipeGCN:
+    """Composable partition-parallel GCN with pipelined communication.
+
+    All methods are pure; state (params / pipeline buffers / rng) is explicit
+    so the step can be jitted, shard_mapped, scanned, and checkpointed.
+    """
+
+    model: ModelConfig
+    pipe: PipeConfig
+
+    # ---------------- parameters & state ----------------
+
+    def init_params(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        params = {}
+        for ell, (fin, fout) in enumerate(self.model.layer_dims()):
+            fan_in = 2 * fin if self.model.kind == "sage" else fin
+            key, sub = jax.random.split(key)
+            scale = jnp.sqrt(2.0 / (fan_in + fout)).astype(dtype)
+            params[f"w{ell}"] = jax.random.normal(sub, (fan_in, fout), dtype) * scale
+            params[f"b{ell}"] = jnp.zeros((fout,), dtype)
+        return params
+
+    def init_buffers(self, topo: Topology, dtype=jnp.float32,
+                     leading: bool = True) -> dict:
+        """Zero pipeline state (Alg. 1 line 6: boundary features start at 0).
+
+        With staleness_steps k>1, each buffer is a FIFO queue along a new
+        leading axis of size k (slot 0 = oldest = consumed)."""
+        p = topo.num_parts
+        k = self.pipe.staleness_steps
+        q = (k,) if k > 1 else ()
+        lead = q + ((p,) if leading else ())
+        feat, grad = [], []
+        for fin, _ in self.model.layer_dims():
+            feat.append(jnp.zeros(lead + (topo.halo_size, fin), dtype))
+            grad.append(jnp.zeros(lead + (topo.max_inner, fin), dtype))
+        return {"feat": tuple(feat), "grad": tuple(grad)}
+
+    # ---------------- shared layer math ----------------
+
+    def _layer_forward(self, topo_slice, w, b, h_prev, halo, drop_mask):
+        """One GCN/SAGE layer on one partition. Returns (h, residuals)."""
+        edge_row, edge_col, edge_w = topo_slice
+        max_inner = h_prev.shape[0]
+        comb = jnp.concatenate([h_prev, halo], axis=0)
+        if drop_mask is not None:
+            comb = comb * drop_mask
+        z = _spmm(edge_row, edge_col, edge_w, comb, max_inner)
+        if self.model.kind == "sage":
+            a = jnp.concatenate([z, comb[:max_inner]], axis=-1)
+        else:
+            a = z
+        u = a @ w + b
+        return u, (comb, a)
+
+    def _layer_backward(self, topo_slice, w, du, comb, drop_mask, max_inner):
+        """Manual VJP of one layer. Returns (dW, db, dH_inner_local, dB_halo)."""
+        edge_row, edge_col, edge_w = topo_slice
+        combined = comb.shape[0]
+        fin = comb.shape[-1]
+        da = du @ w.T
+        if self.model.kind == "sage":
+            dz, dself = da[..., :fin], da[..., fin:]
+        else:
+            dz, dself = da, None
+        dcomb = _spmm_t(edge_row, edge_col, edge_w, dz, combined)
+        if dself is not None:
+            dcomb = dcomb.at[:max_inner].add(dself)
+        if drop_mask is not None:
+            dcomb = dcomb * drop_mask
+        return dcomb[:max_inner], dcomb[max_inner:]
+
+    # ---------------- forward/backward step (per partition view) --------
+
+    def _step_impl(self, backend, topo: Topology, params, buffers, data,
+                   key, train: bool):
+        """Runs per-partition under `backend`. In sim the arrays keep their
+        leading partition axis and per-partition ops are vmapped; in spmd this
+        body executes inside shard_map with squeezed arrays."""
+        L = self.model.num_layers
+        dims = self.model.layer_dims()
+        pipe = self.pipe
+        P = topo.num_parts
+        max_inner = topo.max_inner
+
+        tslice = (topo.edge_row, topo.edge_col, topo.edge_w)
+        send_idx, send_mask = topo.send_idx, topo.send_mask
+        if backend.is_spmd:
+            gather = _gather_send
+            scatter = partial(_scatter_recv, max_inner=max_inner)
+        else:
+            gather = jax.vmap(_gather_send)
+            scatter = jax.vmap(partial(_scatter_recv, max_inner=max_inner))
+
+        h = data.x
+        residuals = []
+        new_feat = []
+        dropout_rate = self.model.dropout if train else 0.0
+
+        for ell in range(L):
+            fin, fout = dims[ell]
+            # -- boundary feature communication --------------------------------
+            send = gather(h, send_idx, send_mask)       # (..., P, slot, fin)
+            if pipe.compress_boundary:
+                send = send.astype(jnp.bfloat16)
+            fresh = backend.exchange(send)              # received boundary feats
+            if pipe.compress_boundary:
+                fresh = fresh.astype(h.dtype)
+            fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, fin))
+            if pipe.stale:
+                buf = buffers["feat"][ell]
+                if pipe.staleness_steps > 1:            # FIFO queue (depth k)
+                    halo = buf[0]                       # consume t-k state
+                    new_feat.append(
+                        jnp.concatenate([buf[1:], fresh[None]], axis=0))
+                else:
+                    halo = buf                          # consume t-1 state
+                    upd = (pipe.gamma * halo + (1 - pipe.gamma) * fresh
+                           if pipe.smooth_feat else fresh)
+                    new_feat.append(upd)
+            else:
+                halo = fresh
+                new_feat.append(buffers["feat"][ell])
+
+            if dropout_rate > 0.0:
+                dkey = jax.random.fold_in(key, ell)
+                dm = backend.dropout_mask(
+                    dkey, dropout_rate,
+                    (max_inner + P * topo.slot, fin), P)
+            else:
+                dm = None
+
+            if backend.is_spmd:
+                u, (comb, a) = self._layer_forward(
+                    tslice, params[f"w{ell}"], params[f"b{ell}"], h, halo, dm)
+            else:
+                fwd = jax.vmap(
+                    lambda er, ec, ew, h_, halo_, dm_, w_=params[f"w{ell}"],
+                           b_=params[f"b{ell}"]:
+                    self._layer_forward((er, ec, ew), w_, b_, h_, halo_, dm_),
+                    in_axes=(0, 0, 0, 0, 0, 0 if dm is not None else None))
+                u, (comb, a) = fwd(*tslice, h, halo, dm)
+            residuals.append((comb, a, u, dm))
+            h = jax.nn.relu(u) if ell < L - 1 else u
+
+        logits = h
+
+        # -- loss ---------------------------------------------------------
+        mask = data.train_mask.astype(logits.dtype)
+        if self.model.multilabel:
+            count_local = jnp.sum(mask) * self.model.num_classes
+        else:
+            count_local = jnp.sum(mask)
+        total = backend.psum(count_local) if backend.is_spmd else jnp.sum(count_local)
+        total = jnp.maximum(total, 1.0)
+        loss_fn = _bce_loss_and_grad if self.model.multilabel else _ce_loss_and_grad
+        loss_local, dlogits = loss_fn(logits, data.labels, mask, total, backend)
+        loss = (backend.psum(loss_local) if backend.is_spmd
+                else jnp.sum(loss_local)) / total
+
+        if not train:
+            return loss, logits, None, None
+
+        # -- manual backward (Alg. 1 lines 17–30) --------------------------
+        grads = {}
+        new_grad = [None] * L
+        j = dlogits
+        for ell in reversed(range(L)):
+            comb, a, u, dm = residuals[ell]
+            du = j if ell == L - 1 else j * (u > 0).astype(j.dtype)
+            gw_local = jnp.einsum("...if,...io->...fo", a, du)
+            gb_local = jnp.sum(du, axis=-2)
+            grads[f"w{ell}"] = backend.psum(gw_local)
+            grads[f"b{ell}"] = backend.psum(gb_local)
+            if ell == 0:
+                new_grad[ell] = buffers["grad"][ell]
+                break
+            if backend.is_spmd:
+                dh_local, db = self._layer_backward(
+                    tslice, params[f"w{ell}"], du, comb, dm, max_inner)
+            else:
+                bwd = jax.vmap(
+                    lambda er, ec, ew, du_, comb_, dm_, w_=params[f"w{ell}"]:
+                    self._layer_backward((er, ec, ew), w_, du_, comb_, dm_,
+                                         max_inner),
+                    in_axes=(0, 0, 0, 0, 0, 0 if dm is not None else None))
+                dh_local, db = bwd(*tslice, du, comb, dm)
+            db = db.reshape(db.shape[:-2] + (P, topo.slot, dims[ell][0]))
+            # -- boundary gradient communication ---------------------------
+            if pipe.compress_boundary:
+                db = db.astype(jnp.bfloat16)
+            db_recv = backend.exchange(db)
+            if pipe.compress_boundary:
+                db_recv = db_recv.astype(j.dtype)
+            fresh_contrib = scatter(db_recv, send_idx, send_mask)
+            if pipe.stale:
+                buf = buffers["grad"][ell]
+                if pipe.staleness_steps > 1:            # FIFO queue (depth k)
+                    contrib = buf[0]                    # consume t-k state
+                    new_grad[ell] = jnp.concatenate(
+                        [buf[1:], fresh_contrib[None]], axis=0)
+                else:
+                    contrib = buf                       # consume t-1 state
+                    upd = (pipe.gamma * contrib
+                           + (1 - pipe.gamma) * fresh_contrib
+                           if pipe.smooth_grad else fresh_contrib)
+                    new_grad[ell] = upd
+            else:
+                contrib = fresh_contrib
+                new_grad[ell] = buffers["grad"][ell]
+            j = dh_local + contrib
+
+        new_buffers = {"feat": tuple(new_feat), "grad": tuple(new_grad)}
+        return loss, logits, grads, new_buffers
+
+    # ---------------- public API ----------------
+
+    def train_step(self, topo: Topology, params, buffers, data: ShardedData,
+                   key: jax.Array):
+        """Sim-backend step over (P, ...) arrays. Returns
+        (loss, grads, new_buffers, logits)."""
+        backend = SimBackend()
+        loss, logits, grads, new_buffers = self._step_impl(
+            backend, topo, params, buffers, data, key, train=True)
+        return loss, grads, new_buffers, logits
+
+    def forward(self, topo: Topology, params, data: ShardedData):
+        """Inference forward with synchronous (fresh) exchange — used for
+        evaluation, like the paper's test-time behaviour."""
+        fresh_self = dataclasses.replace(self, pipe=PipeConfig.vanilla())
+        backend = SimBackend()
+        buffers = fresh_self.init_buffers(topo)
+        loss, logits, _, _ = fresh_self._step_impl(
+            backend, topo, params, buffers, data, jax.random.PRNGKey(0),
+            train=False)
+        return loss, logits
+
+    # -- SPMD (shard_map) construction ---------------------------------
+
+    def make_spmd_step(self, mesh, topo: Topology, axis_name="parts",
+                       train: bool = True):
+        """Build a jitted shard_map step over a 1-D partition mesh axis.
+
+        Arrays with leading partition axis are sharded over `axis_name`;
+        params are replicated; the returned function has the same signature
+        as `train_step` (plus data), operating on global arrays.
+        """
+        from jax.sharding import PartitionSpec as PS
+
+        backend = SpmdBackend(axis_name)
+        pspec = PS(axis_name)
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        n_devices = 1
+        for a in axes:
+            n_devices *= mesh.shape[a]
+        n_local = topo.num_parts // n_devices
+
+        kq = self.pipe.staleness_steps
+
+        def per_device(topo_l, params, buffers, data, key):
+            # shard_map leaves a leading axis of size P/num_devices: vmap it
+            # when >1 partition per device, else squeeze. Buffer queues
+            # (k-step staleness) carry the partition axis at position 1.
+            def one(topo1, bufs1, data1):
+                return self._step_impl(backend, Topology(*topo1), params,
+                                       bufs1, ShardedData(*data1), key, train)
+            if n_local == 1:
+                topo1 = jax.tree.map(lambda x: x[0], tuple(topo_l))
+                bsq = (lambda x: x[:, 0]) if kq > 1 else (lambda x: x[0])
+                bufs1 = jax.tree.map(bsq, buffers)
+                data1 = jax.tree.map(lambda x: x[0], tuple(data))
+                loss, logits, grads, newb = one(topo1, bufs1, data1)
+                logits = logits[None]
+                bex = (lambda x: x[:, None]) if kq > 1 else (lambda x: x[None])
+                newb = None if newb is None else jax.tree.map(bex, newb)
+            else:  # pragma: no cover - multi-partition-per-device path
+                raise NotImplementedError(
+                    "one partition per device is required")
+            return loss, logits, grads, newb
+
+        def step(topo_g, params, buffers, data, key):
+            bspec = PS(None, axis_name) if kq > 1 else pspec
+            f = jax.shard_map(
+                per_device, mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: pspec, tuple(topo_g)),
+                          jax.tree.map(lambda _: PS(), params),
+                          jax.tree.map(lambda _: bspec, buffers),
+                          jax.tree.map(lambda _: pspec, tuple(data)),
+                          PS()),
+                out_specs=(PS(), pspec,
+                           jax.tree.map(lambda _: PS(), params) if train else PS(),
+                           jax.tree.map(lambda _: bspec, buffers) if train else PS()),
+                check_vma=False)
+            return f(tuple(topo_g), params, buffers, tuple(data), key)
+
+        return jax.jit(step)

@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenStream, synthetic_token_batches
+from repro.data.graph_pipeline import GraphDataPipeline
+
+__all__ = ["TokenStream", "synthetic_token_batches", "GraphDataPipeline"]

@@ -1,0 +1,123 @@
+"""Graph partitioning with a METIS-like objective (minimize communication
+volume under a balance constraint).
+
+METIS itself is unavailable offline; we implement the same recipe the paper
+relies on at a smaller scale: balanced BFS growth (Kernighan-style seeding)
+followed by greedy boundary refinement that moves nodes to the neighboring
+partition with the largest edge-cut gain, subject to balance.  The objective
+the paper sets for METIS is *communication volume* — the number of replicated
+boundary nodes — which edge-cut refinement tracks closely on these graphs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def edge_cut(g: CSRGraph, part: np.ndarray) -> int:
+    dst = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    return int(np.sum(part[dst] != part[g.indices]))
+
+
+def comm_volume(g: CSRGraph, part: np.ndarray, num_parts: int) -> int:
+    """Total replicated boundary nodes = sum over partitions of |halo|."""
+    dst = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    src = g.indices.astype(np.int64)
+    cross = part[dst] != part[src]
+    # Unique (receiving partition, remote node) pairs.
+    key = part[dst][cross].astype(np.int64) * g.num_nodes + src[cross]
+    return len(np.unique(key))
+
+
+def _bfs_grow(g: CSRGraph, num_parts: int, rng: np.random.Generator) -> np.ndarray:
+    """Grow num_parts balanced regions from spread-out seeds."""
+    n = g.num_nodes
+    part = np.full(n, -1, dtype=np.int32)
+    target = -(-n // num_parts)
+    sizes = np.zeros(num_parts, dtype=np.int64)
+    # Seeds: farthest-point-ish sampling via random + degree.
+    seeds = rng.choice(n, size=num_parts, replace=False)
+    frontiers: list[list[int]] = [[int(s)] for s in seeds]
+    for p, s in enumerate(seeds):
+        if part[s] == -1:
+            part[s] = p
+            sizes[p] += 1
+    active = True
+    while active:
+        active = False
+        for p in range(num_parts):
+            if sizes[p] >= target or not frontiers[p]:
+                continue
+            nxt: list[int] = []
+            for v in frontiers[p]:
+                s, e = g.indptr[v], g.indptr[v + 1]
+                for u in g.indices[s:e]:
+                    if part[u] == -1 and sizes[p] < target:
+                        part[u] = p
+                        sizes[p] += 1
+                        nxt.append(int(u))
+            frontiers[p] = nxt
+            if nxt:
+                active = True
+    # Unreached nodes (disconnected): round-robin into smallest parts.
+    for v in np.flatnonzero(part == -1):
+        p = int(np.argmin(sizes))
+        part[v] = p
+        sizes[p] += 1
+    return part
+
+
+def _refine(g: CSRGraph, part: np.ndarray, num_parts: int,
+            passes: int, imbalance: float) -> np.ndarray:
+    """Greedy gain-based boundary refinement (one-sided KL/FM sweep)."""
+    n = g.num_nodes
+    max_size = int((n / num_parts) * (1 + imbalance)) + 1
+    part = part.copy()
+    for _ in range(passes):
+        sizes = np.bincount(part, minlength=num_parts)
+        moved = 0
+        dst = np.repeat(np.arange(n), np.diff(g.indptr))
+        boundary = np.unique(dst[part[dst] != part[g.indices]])
+        for v in boundary:
+            s, e = g.indptr[v], g.indptr[v + 1]
+            nbr_parts = part[g.indices[s:e]]
+            counts = np.bincount(nbr_parts, minlength=num_parts)
+            home = part[v]
+            best = home
+            best_gain = 0
+            for p in np.flatnonzero(counts):
+                if p == home or sizes[p] + 1 > max_size:
+                    continue
+                gain = counts[p] - counts[home]
+                if gain > best_gain:
+                    best_gain, best = gain, p
+            if best != home and sizes[home] > 1:
+                sizes[home] -= 1
+                sizes[best] += 1
+                part[v] = best
+                moved += 1
+        if moved == 0:
+            break
+    return part
+
+
+def partition_graph(g: CSRGraph, num_parts: int, seed: int = 0,
+                    refine_passes: int = 4, imbalance: float = 0.05,
+                    method: str = "bfs+refine") -> np.ndarray:
+    """Partition nodes into num_parts balanced parts; returns part[v]."""
+    if num_parts <= 1:
+        return np.zeros(g.num_nodes, dtype=np.int32)
+    if num_parts > g.num_nodes:
+        raise ValueError("more partitions than nodes")
+    rng = np.random.default_rng(seed)
+    if method == "random":
+        part = rng.integers(0, num_parts, size=g.num_nodes).astype(np.int32)
+        # Rebalance exactly.
+        order = rng.permutation(g.num_nodes)
+        part = (np.arange(g.num_nodes) % num_parts)[np.argsort(order)].astype(np.int32)
+        return part
+    part = _bfs_grow(g, num_parts, rng)
+    if "refine" in method:
+        part = _refine(g, part, num_parts, refine_passes, imbalance)
+    return part

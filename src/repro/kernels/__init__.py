@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot spots:
+  gcn_spmm         block-sparse neighbor aggregation (the paper's SpMM)
+  flash_attention  blockwise online-softmax GQA attention (prefill path)
+Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
+"""

@@ -1,0 +1,129 @@
+"""Block-sparse SpMM Pallas TPU kernel — the GCN neighbor-aggregation
+hot spot (z = P·H), adapted from the paper's CUDA/DGL CSR SpMM to TPU.
+
+TPU adaptation (DESIGN.md §2.4): CSR gather/scatter is VPU-hostile; instead
+the propagation matrix is tiled into TILE×TILE *dense* blocks (MXU-shaped),
+only nonzero tiles are stored, and the kernel contracts each nonzero tile
+against the matching feature row-block on the MXU:
+
+    out[r·T:(r+1)·T, :] += tile_vals[t] @ h[c·T:(c+1)·T, :]
+
+Tiles are sorted by row-block; the (row-major) grid revisits the same output
+block for consecutive tiles of one row, accumulating in VMEM, and flushes
+when the row-block changes — the canonical TPU block-sparse reduction
+pattern. Tile coordinates arrive via scalar prefetch (PrefetchScalarGridSpec)
+so the index stream is resident before the DMA of each tile.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 128          # MXU-shaped adjacency tile
+FEAT_BLOCK = 128    # feature columns per grid step
+
+
+def _kernel(rows_ref, cols_ref, vals_ref, h_ref, out_ref, acc_ref):
+    """Grid: (num_feature_blocks, num_tiles) — tiles innermost so the output
+    block for one row-run stays resident in VMEM."""
+    t = pl.program_id(1)
+
+    first_of_run = jnp.logical_or(
+        t == 0, rows_ref[t] != rows_ref[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first_of_run)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(vals_ref[...], h_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    last = t == pl.num_programs(1) - 1
+    last_of_run = jnp.logical_or(
+        last, rows_ref[t] != rows_ref[jnp.minimum(t + 1,
+                                                  pl.num_programs(1) - 1)])
+
+    @pl.when(last_of_run)
+    def _():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def spmm_block_sparse(tile_rows, tile_cols, tile_vals, h, num_rows: int,
+                      interpret: bool = True):
+    """z = P_blocksparse · h.
+
+    tile_rows/cols: (n_tiles,) int32 sorted by row; tile_vals: (n_tiles,T,T);
+    h: (C, F) with C = num_col_blocks·T, F % FEAT_BLOCK == 0.
+    num_rows: output rows (multiple of T). Rows with no tiles stay zero only
+    if every row-block has ≥1 tile — callers pad with an explicit zero tile
+    per empty row-block (build_tiles does this).
+    """
+    n_tiles = tile_rows.shape[0]
+    f = h.shape[1]
+    assert f % FEAT_BLOCK == 0 and num_rows % TILE == 0
+    grid = (f // FEAT_BLOCK, n_tiles)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,      # tile_rows, tile_cols
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, TILE, TILE),
+                             lambda fb, t, rows, cols: (t, 0, 0)),
+                pl.BlockSpec((TILE, FEAT_BLOCK),
+                             lambda fb, t, rows, cols: (cols[t], fb)),
+            ],
+            out_specs=pl.BlockSpec((TILE, FEAT_BLOCK),
+                                   lambda fb, t, rows, cols: (rows[t], fb)),
+            scratch_shapes=[pltpu.VMEM((TILE, FEAT_BLOCK), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_rows, f), h.dtype),
+        interpret=interpret,
+    )(tile_rows, tile_cols, tile_vals, h)
+
+
+def build_tiles(dense_or_coo, num_rows: int, num_cols: int,
+                tile: int = TILE):
+    """Extract nonzero TILE×TILE tiles (numpy, offline preprocessing).
+
+    Accepts a dense (R, C) matrix or a (row, col, val) COO triple.
+    Guarantees ≥1 tile per row-block (zero filler) and returns tiles sorted
+    by (row_block, col_block).
+    """
+    rpad = -(-num_rows // tile) * tile
+    cpad = -(-num_cols // tile) * tile
+    if isinstance(dense_or_coo, tuple):
+        row, col, val = dense_or_coo
+        dense = np.zeros((rpad, cpad), np.float32)
+        np.add.at(dense, (row, col), val)
+    else:
+        dense = np.zeros((rpad, cpad), np.float32)
+        dense[:num_rows, :num_cols] = dense_or_coo
+    nrb, ncb = rpad // tile, cpad // tile
+    blocks = dense.reshape(nrb, tile, ncb, tile).transpose(0, 2, 1, 3)
+    nz = np.abs(blocks).sum(axis=(2, 3)) > 0
+    rows, cols, vals = [], [], []
+    for rb in range(nrb):
+        cbs = np.flatnonzero(nz[rb])
+        if len(cbs) == 0:
+            cbs = np.array([0])         # zero filler keeps the run present
+        for cb in cbs:
+            rows.append(rb)
+            cols.append(cb)
+            vals.append(blocks[rb, cb])
+    return (np.asarray(rows, np.int32), np.asarray(cols, np.int32),
+            np.stack(vals).astype(np.float32))
+
+
+def tile_density(tile_rows, num_rows: int, num_cols: int,
+                 tile: int = TILE) -> float:
+    """Fraction of tiles stored vs the dense tile grid."""
+    nrb = -(-num_rows // tile)
+    ncb = -(-num_cols // tile)
+    return len(tile_rows) / float(nrb * ncb)

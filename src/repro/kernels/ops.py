@@ -1,0 +1,45 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+`interpret` defaults to auto: True on CPU (this container — kernel bodies
+execute in Python for validation), False on real TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gcn_spmm as _spmm
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_rows", "interpret"))
+def spmm(tile_rows, tile_cols, tile_vals, h, num_rows: int,
+         interpret: bool | None = None):
+    """Block-sparse aggregation z = P·h (see gcn_spmm.py)."""
+    return _spmm.spmm_block_sparse(tile_rows, tile_cols, tile_vals, h,
+                                   num_rows,
+                                   interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block", "kv_block",
+                                   "interpret"))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              q_block: int = _fa.DEFAULT_Q_BLOCK,
+              kv_block: int = _fa.DEFAULT_KV_BLOCK,
+              interpret: bool | None = None):
+    """Flash GQA attention (see flash_attention.py)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_block=q_block, kv_block=kv_block,
+                               interpret=_auto_interpret(interpret))
+
+
+build_tiles = _spmm.build_tiles
+tile_density = _spmm.tile_density

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept by the hypothesis tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def spmm_ref(tile_rows, tile_cols, tile_vals, h, num_rows: int):
+    """Dense oracle for the block-sparse SpMM kernel."""
+    tile = tile_vals.shape[-1]
+    f = h.shape[1]
+    hb = h.reshape(-1, tile, f)
+    contrib = jnp.einsum("tij,tjf->tif", tile_vals, hb[tile_cols])
+    out = jnp.zeros((num_rows // tile, tile, f), h.dtype)
+    out = out.at[tile_rows].add(contrib.astype(h.dtype))
+    return out.reshape(num_rows, f)
+
+
+def mha_ref(q, k, v, causal: bool = True, window: int = 0,
+            positions=None):
+    """Dense attention oracle (GQA): q (B,S,H,d), k/v (B,T,K,d)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if positions is None:
+        positions = jnp.arange(s)
+    tpos = jnp.arange(t)
+    qg = q.reshape(b, s, kh, g, d)
+    scores = jnp.einsum("bskgd,btkd->bskgt", qg, k) / jnp.sqrt(d)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= tpos[None, :] <= positions[:, None]
+    if window:
+        mask &= positions[:, None] - tpos[None, :] < window
+    scores = jnp.where(mask[None, :, None, None, :],
+                       scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bskgt,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Production target: TPU v5e, 256 chips/pod.
+  single pod: (16, 16)    ("data", "model")
+  two pods:   (2, 16, 16) ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(num_devices: int | None = None, axis: str = "parts"):
+    """1-D mesh over available (possibly forced-host) devices, for the
+    PipeGCN SPMD backend and small-scale tests."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+
+
+# Hardware constants for the roofline model (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_BYTES = 16e9                # per chip

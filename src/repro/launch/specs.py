@@ -1,0 +1,82 @@
+"""Abstract input/param specs for the dry-run: ShapeDtypeStructs with
+NamedShardings — weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig, InputShape
+from repro.models.model import LM
+
+
+def batch_axes(mesh) -> tuple:
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def adapt_spec(ps: P, mesh) -> P:
+    """Map 'data' -> ('pod','data') on multi-pod meshes."""
+    if "pod" not in mesh.axis_names:
+        return ps
+    out = []
+    for entry in ps:
+        if entry == "data":
+            out.append(("pod", "data"))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def with_sharding(tree_sds, tree_spec, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def leaf(sds, spec):
+        spec = adapt_spec(spec, mesh)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(leaf, tree_sds, tree_spec,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_params(lm: LM, mesh):
+    sds = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0)))
+    return with_sharding(sds, lm.param_specs(), mesh)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    """Model inputs for the given input shape, as sharded SDS."""
+    bx = batch_axes(mesh)
+    b = shape.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    tok = jax.ShapeDtypeStruct(
+        (b, shape.seq_len if shape.mode != "decode" else 1), jnp.int32,
+        sharding=NamedSharding(mesh, P(bx if b > 1 else None, None)))
+    batch = {"tokens": tok}
+    if shape.mode != "decode":
+        batch["labels"] = tok
+    if cfg.is_encdec:
+        batch["audio_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_audio_frames, cfg.d_model), dt,
+            sharding=NamedSharding(mesh, P(bx if b > 1 else None, None, None)))
+    if cfg.num_image_tokens:
+        batch["image_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), dt,
+            sharding=NamedSharding(mesh, P(bx if b > 1 else None, None, None)))
+    return batch
+
+
+def abstract_caches(lm: LM, shape: InputShape, mesh):
+    cfg = lm.cfg
+    model_size = mesh.shape["model"]
+    shard_kv = cfg.num_kv_heads % model_size == 0 and cfg.num_kv_heads >= model_size
+    sds = jax.eval_shape(
+        lambda: lm.init_caches(shape.global_batch, shape.seq_len))
+    specs = lm.cache_specs(shard_kv)
+    if shape.global_batch == 1:
+        # batch axis unshardable: 'data' only ever marks the batch dim in
+        # cache specs, so strip it everywhere (incl. stacked-layer specs)
+        def fix(ps):
+            return P(*[None if e == "data" else e for e in ps])
+        specs = jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))
+    return with_sharding(sds, specs, mesh)

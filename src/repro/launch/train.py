@@ -1,0 +1,135 @@
+"""Training launcher.
+
+Two workload kinds behind one CLI:
+
+  GCN full-graph training (the paper):
+    python -m repro.launch.train --workload gcn --dataset reddit-sim \
+        --partitions 4 --variant pipegcn-gf --epochs 300
+
+  Transformer LM training (assigned archs, reduced or full config):
+    python -m repro.launch.train --workload lm --arch qwen3-8b --reduced \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.core import ModelConfig, PipeConfig, train_pipegcn
+from repro.data import GraphDataPipeline, TokenStream
+from repro.graph.synthetic import model_template
+from repro.models.model import LM
+from repro.optim import adamw, linear_warmup_cosine
+
+
+def run_gcn(args) -> dict:
+    pipeline = GraphDataPipeline.build(args.dataset, args.partitions,
+                                       kind=args.gcn_kind, seed=args.seed)
+    tpl = model_template(args.dataset)
+    mc = ModelConfig(kind=args.gcn_kind, feat_dim=pipeline.dataset.feat_dim,
+                     hidden=args.hidden or tpl["hidden"],
+                     num_layers=args.layers or tpl["num_layers"],
+                     num_classes=pipeline.dataset.num_classes,
+                     dropout=tpl["dropout"],
+                     multilabel=pipeline.dataset.multilabel)
+    pc = PipeConfig.named(args.variant, gamma=args.gamma)
+    res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
+                        lr=args.lr or tpl["lr"], seed=args.seed,
+                        eval_every=args.eval_every, log=print)
+    out = {"workload": "gcn", "dataset": args.dataset,
+           "partitions": args.partitions, "variant": args.variant,
+           "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
+           "history": res.history}
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.epochs, res.params)
+    print(json.dumps({k: out[k] for k in
+                      ("final", "epochs_per_sec")}, indent=1))
+    return out
+
+
+def run_lm(args) -> dict:
+    from repro.configs import get_arch
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.PRNGKey(args.seed))
+    opt = adamw(linear_warmup_cosine(args.lr or 3e-4, 10, args.steps),
+                max_grad_norm=1.0)
+    opt_state = opt.init(params)
+
+    def add_stubs(batch, b):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.is_encdec:
+            batch["audio_embed"] = jnp.zeros(
+                (b, cfg.num_audio_frames, cfg.d_model), lm.dtype)
+        if cfg.num_image_tokens:
+            batch["image_embed"] = jnp.zeros(
+                (b, cfg.num_image_tokens, cfg.d_model), lm.dtype)
+        return batch
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lm.loss_fn)(params, batch)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return loss, params, opt_state
+
+    stream = iter(TokenStream(cfg.vocab_size, args.seq, args.batch,
+                              seed=args.seed))
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = add_stubs(next(stream), args.batch)
+        loss, params, opt_state = step(params, opt_state, batch)
+        losses.append(float(loss))
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:5d} loss {losses[-1]:.4f}", flush=True)
+    dt = time.perf_counter() - t0
+    out = {"workload": "lm", "arch": args.arch, "reduced": args.reduced,
+           "first_loss": losses[0], "last_loss": losses[-1],
+           "steps_per_sec": args.steps / dt}
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, params)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=["gcn", "lm"], default="gcn")
+    # gcn
+    ap.add_argument("--dataset", default="reddit-sim")
+    ap.add_argument("--partitions", type=int, default=4)
+    ap.add_argument("--variant", default="pipegcn",
+                    help="vanilla|pipegcn|pipegcn-g|pipegcn-f|pipegcn-gf")
+    ap.add_argument("--gcn-kind", default="sage", choices=["sage", "gcn"])
+    ap.add_argument("--gamma", type=float, default=0.95)
+    ap.add_argument("--epochs", type=int, default=300)
+    ap.add_argument("--eval-every", type=int, default=20)
+    ap.add_argument("--hidden", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=0)
+    # lm
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    # common
+    ap.add_argument("--lr", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    if args.workload == "gcn":
+        run_gcn(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Assigned-architecture model zoo (dense / MoE / MLA / SSM / hybrid / VLM /
+enc-dec) with train, prefill, and decode entry points."""
+from repro.models.config import ArchConfig, InputShape, INPUT_SHAPES
+from repro.models.model import LM
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "LM"]

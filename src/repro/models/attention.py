@@ -1,0 +1,265 @@
+"""Attention: GQA self-attention (full / causal / sliding-window), cross-
+attention, and single-token decode against full or ring (sliding-window)
+KV caches. Pure-jnp reference math; the Pallas flash kernel plugs in at the
+model level for the prefill hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, make_dense, rms_head_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig, dtype, cross: bool = False):
+    d, h, k = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": make_dense(keys[0], (d, h * hd), dtype),
+        "wk": make_dense(keys[1], (d, k * hd), dtype),
+        "wv": make_dense(keys[2], (d, k * hd), dtype),
+        "wo": make_dense(keys[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((k * hd,), dtype)
+        p["bv"] = jnp.zeros((k * hd,), dtype)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.ones((hd,), dtype)
+        p["knorm"] = jnp.ones((hd,), dtype)
+    if cross:
+        p["gate"] = jnp.zeros((), dtype)   # llama-vision tanh gate
+    return p
+
+
+def attention_spec(cfg: ArchConfig, cross: bool = False):
+    p = {"wq": P(None, "model"), "wk": P(None, "model"),
+         "wv": P(None, "model"), "wo": P("model", None)}
+    if cfg.qkv_bias:
+        p.update(bq=P("model"), bk=P("model"), bv=P("model"))
+    if cfg.qk_norm:
+        p.update(qnorm=P(None), knorm=P(None))
+    if cross:
+        p["gate"] = P()
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, xq, xkv):
+    h, k, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = xq @ p["wq"]
+    kk = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, kk, v = q + p["bq"], kk + p["bk"], v + p["bv"]
+    q = q.reshape(*xq.shape[:-1], h, hd)
+    kk = kk.reshape(*xkv.shape[:-1], k, hd)
+    v = v.reshape(*xkv.shape[:-1], k, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["qnorm"], q)
+        kk = rms_head_norm(p["knorm"], kk)
+    return q, kk, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,hd), k: (B,T,K,hd) -> (B,S,K,G,T) grouped scores."""
+    b, s, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, s, kheads, g, hd)
+    return jnp.einsum("bskgd,btkd->bskgt", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _gqa_out(probs, v, h):
+    b, s, kheads, g, t = probs.shape
+    out = jnp.einsum("bskgt,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, -1)
+
+
+# Sequences longer than this use the blockwise online-softmax path (never
+# materializes the S×S score matrix) — the pure-jnp analogue of the Pallas
+# flash kernel, and its numerical oracle.
+BLOCKWISE_THRESHOLD = 4096
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+def blockwise_attention(q, k, v, positions, causal: bool, window: int,
+                        q_block: int = Q_BLOCK, kv_block: int = KV_BLOCK):
+    """Online-softmax attention over (q, kv) blocks.
+
+    q: (B,S,H,hd), k/v: (B,T,K,hd) -> (B,S,H,hd). positions: (S,) == (T,).
+    """
+    b, s, h, hd = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                       # may differ from hd (MLA)
+    g = h // kheads
+    assert s % q_block == 0 and t % kv_block == 0, (s, t)
+    nq, nk = s // q_block, t // kv_block
+    scale = 1.0 / jnp.sqrt(hd)
+
+    qb = q.reshape(b, nq, q_block, kheads, g, hd)
+    kb = k.reshape(b, nk, kv_block, kheads, hd)
+    vb = v.reshape(b, nk, kv_block, kheads, vd)
+    posq = positions.reshape(nq, q_block)
+    posk = positions.reshape(nk, kv_block) if t == s else \
+        jnp.arange(t).reshape(nk, kv_block)
+
+    def q_step(_, qi):
+        q_i, pos_i = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_j, v_j, pos_j = ki
+            sc = jnp.einsum("bqkgd,bckd->bqkgc", q_i, k_j).astype(jnp.float32)
+            sc = sc * scale
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= pos_j[None, :] <= pos_i[:, None]
+            if window:
+                mask &= pos_i[:, None] - pos_j[None, :] < window
+            sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", pexp.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, q_block, kheads, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, q_block, kheads, g), jnp.float32)
+        a0 = jnp.zeros((b, q_block, kheads, g, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), posk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.moveaxis(qb, 1, 0), posq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, vd)
+    return out
+
+
+def self_attention(p, cfg: ArchConfig, x, positions, use_rope: bool = True,
+                   causal: bool = True):
+    """Full-sequence self-attention (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    if s > BLOCKWISE_THRESHOLD and s % Q_BLOCK == 0:
+        out = blockwise_attention(q, k, v, positions, causal,
+                                  cfg.sliding_window)
+        return out.reshape(*x.shape[:-1], -1) @ p["wo"]
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    tpos = positions
+    mask = jnp.ones((x.shape[1], x.shape[1]), bool)
+    if causal:
+        mask &= tpos[None, :] <= tpos[:, None]
+    if cfg.sliding_window:
+        mask &= tpos[:, None] - tpos[None, :] < cfg.sliding_window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, cfg.num_heads)
+    return out.reshape(*x.shape[:-1], -1) @ p["wo"]
+
+
+def cross_attention(p, cfg: ArchConfig, x, memory, gated: bool = False):
+    """Cross-attention to encoder / vision memory (no RoPE)."""
+    q, k, v = _project_qkv(p, cfg, x, memory)
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, cfg.num_heads)
+    out = out.reshape(*x.shape[:-1], -1) @ p["wo"]
+    if gated:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return out
+
+
+# ------------------------------------------------------------------ caches
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    """Full cache, or ring cache of size sliding_window when set."""
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    k = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, length, k, hd), dtype),
+            "v": jnp.zeros((batch, length, k, hd), dtype)}
+
+
+def kv_cache_spec(cfg: ArchConfig, shard_heads: bool):
+    """Shard kv-head axis when it divides the mesh; else shard cache length."""
+    if shard_heads:
+        return {"k": P("data", None, "model", None),
+                "v": P("data", None, "model", None)}
+    return {"k": P("data", "model", None, None),
+            "v": P("data", "model", None, None)}
+
+
+def decode_attention(p, cfg: ArchConfig, x, cache, pos, use_rope: bool = True):
+    """One-token decode: x (B,1,D); cache holds `pos` previous tokens.
+
+    Returns (out, new_cache).  Ring-buffer writes when sliding_window is set.
+    """
+    b = x.shape[0]
+    length = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if use_rope:
+        posv = jnp.full((b, 1), pos)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    slot = (pos % length) if cfg.sliding_window else pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    scores = _gqa_scores(q, k_cache).astype(jnp.float32)   # (B,1,K,G,T)
+    idx = jnp.arange(length)
+    if cfg.sliding_window:
+        # ring: slot t holds absolute position  p_t = t + floor((pos-t)/L)*L...
+        # validity: the ring contains the last `length` positions <= pos.
+        written = jnp.where(idx <= slot, idx + (pos - slot),
+                            idx + (pos - slot) - length)
+        valid = written >= 0
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v_cache, cfg.num_heads)
+    out = out.reshape(b, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def prefill_attention(p, cfg: ArchConfig, x, positions, cache, use_rope=True):
+    """Full-sequence attention that also fills the KV cache."""
+    q, k, v = _project_qkv(p, cfg, x, x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    tpos = positions
+    mask = tpos[None, :] <= tpos[:, None]
+    if cfg.sliding_window:
+        mask &= tpos[:, None] - tpos[None, :] < cfg.sliding_window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, cfg.num_heads).reshape(*x.shape[:-1], -1) @ p["wo"]
+    length = cache["k"].shape[1]
+    if cfg.sliding_window and length < s:
+        k_w, v_w = k[:, -length:], v[:, -length:]
+        # ring layout: absolute position t sits at slot t % length
+        start = s - length
+        slots = (jnp.arange(length) + start) % length
+        k_cache = jnp.zeros_like(cache["k"]).at[:, slots].set(k_w)
+        v_cache = jnp.zeros_like(cache["v"]).at[:, slots].set(v_w)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    return out, {"k": k_cache, "v": v_cache}

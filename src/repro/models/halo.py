@@ -1,0 +1,207 @@
+"""Beyond-paper: PipeGCN-style *stale halo* for sequence-parallel
+sliding-window attention (DESIGN.md §2.5).
+
+Sequence parallelism shards the token axis across devices. Sliding-window
+attention (window W) then has a PipeGCN-shaped dependency: the first W
+queries of shard i attend to the last W keys/values of shard i−1 — a
+boundary/halo set, exactly like boundary nodes in partition-parallel GCN.
+
+  sync mode : halo K/V fetched with ppermute every step (vanilla GCN analogue;
+              exchange is on the critical path).
+  stale mode: the halo consumed at step t is the one produced at t−1
+              (PipeGCN analogue; the ppermute has no data dependence on
+              step-t compute and overlaps it). Optional EMA smoothing over
+              the halo (PipeGCN-F analogue, §3.4).
+
+Staleness semantics follow PipeGCN-F (feature staleness): the stale halo is
+a constant w.r.t. the current step (`stop_gradient`), i.e. the halo gradient
+term is dropped rather than deferred. The full deferred-gradient semantics
+(PipeGCN-G) is implemented for the GCN core in repro/core; transplanting the
+deferred *attention* VJP is future work and noted in DESIGN.md.
+
+The halo buffer is pipeline state threaded through the train step, like
+`PipeGCN.init_buffers`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloConfig:
+    d_model: int = 128
+    num_heads: int = 4
+    num_layers: int = 2
+    window: int = 32
+    vocab: int = 256
+    stale: bool = True          # PipeGCN-style deferral
+    smooth: bool = False        # EMA over the halo (PipeGCN-F)
+    gamma: float = 0.9
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.num_heads
+
+
+def init_params(key, cfg: HaloConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 2 + cfg.num_layers)
+    def dense(k, shape):
+        return jax.random.normal(k, shape, dtype) / np.sqrt(shape[0])
+    params = {"embed": dense(ks[0], (cfg.vocab, cfg.d_model)),
+              "head": dense(ks[1], (cfg.d_model, cfg.vocab))}
+    for ell in range(cfg.num_layers):
+        kk = jax.random.split(ks[2 + ell], 5)
+        params[f"l{ell}"] = {
+            "wq": dense(kk[0], (cfg.d_model, cfg.d_model)),
+            "wk": dense(kk[1], (cfg.d_model, cfg.d_model)),
+            "wv": dense(kk[2], (cfg.d_model, cfg.d_model)),
+            "wo": dense(kk[3], (cfg.d_model, cfg.d_model)),
+            "wf": dense(kk[4], (cfg.d_model, 4 * cfg.d_model)),
+            "wf2": dense(jax.random.fold_in(kk[4], 1),
+                         (4 * cfg.d_model, cfg.d_model)),
+            # T5-style relative position bias over the window (makes
+            # position-targeted retrieval directly learnable in the demo)
+            "rb": jnp.zeros((cfg.num_heads, cfg.window + 1), dtype),
+        }
+    return params
+
+
+def init_halo_buffers(cfg: HaloConfig, local_len: int, batch: int,
+                      num_shards: int, dtype=jnp.float32):
+    """Stale halo K/V per layer, with leading shard axis (like sim backend)."""
+    w, h, hd = cfg.window, cfg.num_heads, cfg.head_dim
+    return [
+        {"k": jnp.zeros((num_shards, batch, w, h, hd), dtype),
+         "v": jnp.zeros((num_shards, batch, w, h, hd), dtype)}
+        for _ in range(cfg.num_layers)
+    ]
+
+
+def _local_window_attention(q, k, v, k_halo, v_halo, pos0, window,
+                            rel_bias=None):
+    """Causal sliding-window attention where the key set is
+    [halo (W tokens ending at pos0-1) ; local (S_loc tokens from pos0)]."""
+    b, s, h, hd = q.shape
+    w = k_halo.shape[1]
+    kk = jnp.concatenate([k_halo, k], axis=1)
+    vv = jnp.concatenate([v_halo, v], axis=1)
+    qpos = pos0 + jnp.arange(s)
+    kpos = jnp.concatenate([pos0 - w + jnp.arange(w), pos0 + jnp.arange(s)])
+    scores = jnp.einsum("bshd,bthd->bsht", q, kk) / np.sqrt(hd)
+    rel = qpos[:, None] - kpos[None, :]
+    if rel_bias is not None:
+        idx = jnp.clip(rel, 0, rel_bias.shape[1] - 1)
+        bias = jnp.moveaxis(rel_bias.T[idx], -1, 1)   # (s,t,h)->(s,h,t)
+        scores = scores + bias[None]                  # (b,s,h,t)
+    mask = (rel >= 0) & (rel < window)
+    scores = jnp.where(mask[None, :, None, :], scores.astype(jnp.float32),
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bsht,bthd->bshd", probs, vv)
+
+
+def _exchange_halo(k_tail, v_tail, backend_axis):
+    """Fetch the left neighbor's window tail. Shard 0 receives zeros."""
+    if backend_axis is None:                  # sim backend (leading axis)
+        shift = lambda x: jnp.concatenate(
+            [jnp.zeros_like(x[:1]), x[:-1]], axis=0)
+        return shift(k_tail), shift(v_tail)
+    n = jax.lax.axis_size(backend_axis)
+    perm = [(i, i + 1) for i in range(n - 1)]
+    k_h = jax.lax.ppermute(k_tail, backend_axis, perm)
+    v_h = jax.lax.ppermute(v_tail, backend_axis, perm)
+    return k_h, v_h
+
+
+def forward(params, cfg: HaloConfig, tokens, halo_bufs, pos0,
+            backend_axis=None):
+    """Per-shard forward. tokens: (B, S_loc) (leading shard axis in sim mode
+    is handled by the caller via vmap-like broadcasting below).
+
+    Returns (logits, new_halo_bufs).
+    """
+    sim = backend_axis is None
+    w = cfg.window
+    x = params["embed"][tokens]
+    s_loc = tokens.shape[-1]
+    # absolute positions (per shard) for RoPE; halo K arrives pre-roped with
+    # the neighbor's absolute positions, so offsets stay consistent.
+    if sim:
+        positions = pos0[:, None, None] + jnp.arange(s_loc)[None, None, :]
+    else:
+        positions = (pos0 + jnp.arange(s_loc))[None, :]
+    new_bufs = []
+    for ell in range(cfg.num_layers):
+        p = params[f"l{ell}"]
+        h = cfg.num_heads
+        q = (x @ p["wq"]).reshape(*x.shape[:-1], h, cfg.head_dim)
+        k = (x @ p["wk"]).reshape(*x.shape[:-1], h, cfg.head_dim)
+        v = (x @ p["wv"]).reshape(*x.shape[:-1], h, cfg.head_dim)
+        q = apply_rope(q, positions, 10000.0)
+        k = apply_rope(k, positions, 10000.0)
+        tail_k = k[..., -w:, :, :] if not sim else k[:, :, -w:]
+        tail_v = v[..., -w:, :, :] if not sim else v[:, :, -w:]
+        fresh_k, fresh_v = _exchange_halo(tail_k, tail_v, backend_axis)
+        if cfg.stale:
+            use_k = jax.lax.stop_gradient(halo_bufs[ell]["k"])
+            use_v = jax.lax.stop_gradient(halo_bufs[ell]["v"])
+            if cfg.smooth:
+                new_k = cfg.gamma * halo_bufs[ell]["k"] + (1 - cfg.gamma) * fresh_k
+                new_v = cfg.gamma * halo_bufs[ell]["v"] + (1 - cfg.gamma) * fresh_v
+            else:
+                new_k, new_v = fresh_k, fresh_v
+            new_bufs.append({"k": jax.lax.stop_gradient(new_k),
+                             "v": jax.lax.stop_gradient(new_v)})
+        else:
+            use_k, use_v = fresh_k, fresh_v
+            new_bufs.append(halo_bufs[ell])
+        if sim:
+            att = jax.vmap(
+                lambda q_, k_, v_, hk, hv, p0:
+                _local_window_attention(q_, k_, v_, hk, hv, p0, w, p["rb"])
+            )(q, k, v, use_k, use_v, pos0)
+        else:
+            att = _local_window_attention(q, k, v, use_k, use_v, pos0, w,
+                                          p["rb"])
+        att = att.reshape(*x.shape)
+        x = x + att @ p["wo"]
+        x = x + jax.nn.gelu(x @ p["wf"]) @ p["wf2"]
+    return x @ params["head"], new_bufs
+
+
+def make_sim_train_step(cfg: HaloConfig, num_shards: int, lr: float = 1e-3):
+    """Single-device reference: shards as a leading axis (like PipeGCN sim).
+
+    tokens/labels: (num_shards, B, S_loc); pos0: (num_shards,) start offset.
+    Returns (init_opt_state, step) with an Adam optimizer.
+    """
+    from repro.optim import adam
+    opt = adam(lr)
+
+    def loss_fn(params, tokens, labels, bufs, pos0):
+        logits, new_bufs = forward(params, cfg, tokens, bufs, pos0,
+                                   backend_axis=None)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], -1)[..., 0]
+        return jnp.mean(lse - ll), new_bufs
+
+    @jax.jit
+    def step(params, opt_state, tokens, labels, bufs, pos0):
+        (loss, new_bufs), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, tokens, labels, bufs, pos0)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return loss, params, opt_state, new_bufs
+
+    return opt.init, step

@@ -1,0 +1,146 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+Parameters are plain dict pytrees; every init function has a matching
+`*_spec` producing jax.sharding.PartitionSpec leaves for the dry-run
+sharding rules (model axis = tensor parallel, data axis = batch/sequence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def make_dense(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def init_norm(dtype, dim, kind="rmsnorm"):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def norm_spec(kind="rmsnorm"):
+    p = {"scale": P(None)}
+    if kind == "layernorm":
+        p["bias"] = P(None)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """Per-head RMS norm over head_dim (qwen3 qk_norm). x: (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                               # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> np.ndarray:
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / 10000 ** (2 * i / dim)
+    out = np.zeros((seq_len, dim), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out
+
+
+# ---------------------------------------------------------------- MLP
+
+def init_mlp(key, dtype, d_model, d_ff, act="swiglu", bias=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {}
+    if act in ("swiglu", "geglu"):
+        p["wi"] = make_dense(k1, (d_model, d_ff), dtype)
+        p["wg"] = make_dense(k2, (d_model, d_ff), dtype)
+    else:
+        p["wi"] = make_dense(k1, (d_model, d_ff), dtype)
+    p["wo"] = make_dense(k3, (d_ff, d_model), dtype)
+    if bias:
+        p["bi"] = jnp.zeros((d_ff,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_spec(act="swiglu", bias=False):
+    p = {"wi": P(None, "model"), "wo": P("model", None)}
+    if act in ("swiglu", "geglu"):
+        p["wg"] = P(None, "model")
+    if bias:
+        p["bi"] = P("model")
+        p["bo"] = P(None)
+    return p
+
+
+def apply_mlp(p, x, act="swiglu"):
+    h = x @ p["wi"]
+    if "bi" in p:
+        h = h + p["bi"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"])
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------- embed/unembed
+
+def init_embed(key, dtype, vocab, d_model):
+    return {"table": make_dense(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed_spec():
+    return {"table": P("model", None)}
+
+
+def apply_embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed_logits(embed_params, head, x, tie: bool):
+    if tie:
+        return x @ embed_params["table"].T
+    return x @ head["w"]

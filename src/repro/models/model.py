@@ -1,0 +1,558 @@
+"""Language-model assembly for the assigned architecture pool.
+
+A model is a list of *layer groups*: maximal runs of identical layer specs.
+Runs of length ≥ 2 are executed with ``lax.scan`` over stacked parameters
+(keeps HLO small enough to SPMD-partition 64-layer models); singleton runs
+are applied directly. Heterogeneous archs (recurrentgemma's r-r-a pattern,
+llama-vision's every-5th cross-attn layer) fall out of the same grouping.
+
+Three entry points per model:
+  loss_fn(params, batch)                  training forward + CE loss
+  prefill(params, batch)                  fill caches, return last logits
+  decode_step(params, token, caches, pos) one-token serve step
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_embed, apply_mlp, apply_norm,
+                                 embed_spec, init_embed, init_mlp, init_norm,
+                                 make_dense, mlp_spec, norm_spec,
+                                 sinusoidal_positions)
+from repro.models.shardctx import constrain
+
+MOE_AUX_COEF = 0.01
+
+
+class LayerSpec(NamedTuple):
+    mixer: str          # attn | mla | ssd | rglru | xattn
+    cross: bool         # additional cross-attn sublayer (whisper decoder)
+    ffn: str            # dense | moe | none
+    causal: bool = True
+
+
+def decoder_layer_specs(cfg: ArchConfig) -> list[LayerSpec]:
+    kinds = cfg.layer_kinds()
+    specs = []
+    for i, kind in enumerate(kinds):
+        mixer = kind
+        if cfg.use_mla and kind == "attn":
+            mixer = "mla"
+        ffn = "none" if cfg.family == "ssm" else cfg.ffn_kind(i)
+        cross = cfg.is_encdec   # whisper decoder: self + cross each layer
+        specs.append(LayerSpec(mixer, cross, ffn, causal=True))
+    return specs
+
+
+def group_specs(specs: list[LayerSpec]) -> list[tuple[LayerSpec, int]]:
+    groups: list[tuple[LayerSpec, int]] = []
+    for s in specs:
+        if groups and groups[-1][0] == s:
+            groups[-1] = (s, groups[-1][1] + 1)
+        else:
+            groups.append((s, 1))
+    return groups
+
+
+# ------------------------------------------------------------------ layers
+
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": init_norm(dtype, cfg.d_model, cfg.norm)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == "xattn":
+        p["mixer"] = attn.init_attention(ks[0], cfg, dtype, cross=True)
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_mod.init_mla(ks[0], cfg, dtype)
+    elif spec.mixer == "ssd":
+        p["mixer"] = ssd_mod.init_ssd(ks[0], cfg, dtype)
+    elif spec.mixer == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross:
+        p["lnx"] = init_norm(dtype, cfg.d_model, cfg.norm)
+        p["xattn"] = attn.init_attention(ks[1], cfg, dtype, cross=True)
+    if spec.ffn != "none":
+        p["ln2"] = init_norm(dtype, cfg.d_model, cfg.norm)
+        if spec.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[2], cfg, dtype)
+        else:
+            p["ffn"] = init_mlp(ks[2], dtype, cfg.d_model, cfg.d_ff, cfg.act,
+                                bias=(cfg.norm == "layernorm"))
+    return p
+
+
+def layer_spec_tree(cfg: ArchConfig, spec: LayerSpec):
+    p: dict[str, Any] = {"ln1": norm_spec(cfg.norm)}
+    if spec.mixer in ("attn", "xattn"):
+        p["mixer"] = attn.attention_spec(cfg, cross=spec.mixer == "xattn")
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_mod.mla_spec(cfg)
+    elif spec.mixer == "ssd":
+        p["mixer"] = ssd_mod.ssd_spec(cfg)
+    elif spec.mixer == "rglru":
+        p["mixer"] = rglru_mod.rglru_spec(cfg)
+    if spec.cross:
+        p["lnx"] = norm_spec(cfg.norm)
+        p["xattn"] = attn.attention_spec(cfg, cross=True)
+    if spec.ffn != "none":
+        p["ln2"] = norm_spec(cfg.norm)
+        p["ffn"] = (moe_mod.moe_spec(cfg) if spec.ffn == "moe"
+                    else mlp_spec(cfg.act, bias=(cfg.norm == "layernorm")))
+    return p
+
+
+def apply_layer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, memory,
+                gated_cross: bool, moe_dropless: bool = False):
+    """Full-sequence layer (train / prefill-without-cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        mix = attn.self_attention(p["mixer"], cfg, h, positions,
+                                  use_rope=cfg.use_rope, causal=spec.causal)
+    elif spec.mixer == "xattn":
+        mix = attn.cross_attention(p["mixer"], cfg, h, memory,
+                                   gated=gated_cross)
+    elif spec.mixer == "mla":
+        mix = mla_mod.mla_self_attention(p["mixer"], cfg, h, positions)
+    elif spec.mixer == "ssd":
+        mix, _ = ssd_mod.ssd_forward(p["mixer"], cfg, h)
+    elif spec.mixer == "rglru":
+        mix, _ = rglru_mod.rglru_forward(p["mixer"], cfg, h)
+    x = x + mix
+    if spec.cross:
+        xh = apply_norm(p["lnx"], x, cfg.norm)
+        x = x + attn.cross_attention(p["xattn"], cfg, xh, memory)
+    if spec.ffn != "none":
+        fh = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.ffn == "moe":
+            f, aux = moe_mod.apply_moe(p["ffn"], cfg, fh,
+                                       dropless=moe_dropless)
+        else:
+            f = apply_mlp(p["ffn"], fh, cfg.act)
+        x = x + f
+    return x, aux
+
+
+# ------------------------------------------------------------------ caches
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch, max_len, dtype):
+    c: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["kv"] = attn.init_kv_cache(cfg, batch, max_len, dtype)
+    elif spec.mixer == "mla":
+        c["kv"] = mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+    elif spec.mixer == "ssd":
+        c["ssm"] = ssd_mod.init_ssd_cache(cfg, batch, dtype)
+    elif spec.mixer == "rglru":
+        c["lru"] = rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    if spec.mixer == "xattn" or spec.cross:
+        k = cfg.num_kv_heads
+        hd = cfg.resolved_head_dim
+        mem_len = (cfg.num_audio_frames if cfg.is_encdec
+                   else cfg.num_image_tokens)
+        c["xkv"] = {"k": jnp.zeros((batch, mem_len, k, hd), dtype),
+                    "v": jnp.zeros((batch, mem_len, k, hd), dtype)}
+    return c
+
+
+def layer_cache_spec(cfg: ArchConfig, spec: LayerSpec, shard_kv_heads: bool):
+    c: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["kv"] = attn.kv_cache_spec(cfg, shard_kv_heads)
+    elif spec.mixer == "mla":
+        c["kv"] = mla_mod.mla_cache_spec(cfg)
+    elif spec.mixer == "ssd":
+        c["ssm"] = ssd_mod.ssd_cache_spec(cfg)
+    elif spec.mixer == "rglru":
+        c["lru"] = rglru_mod.rglru_cache_spec(cfg)
+    if spec.mixer == "xattn" or spec.cross:
+        mem_len = (cfg.num_audio_frames if cfg.is_encdec
+                   else cfg.num_image_tokens)
+        if shard_kv_heads:
+            xs = P("data", None, "model", None)
+        elif mem_len % 16 == 0:
+            xs = P("data", "model", None, None)
+        else:   # memory is small (encoder frames): replicate across model
+            xs = P("data", None, None, None)
+        c["xkv"] = {"k": xs, "v": xs}
+    return c
+
+
+def _fill_xkv(p, cfg, memory):
+    """Precompute cross-attention K/V from memory (paper-standard serving)."""
+    k = memory @ p["wk"]
+    v = memory @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    kh = k.reshape(*memory.shape[:-1], cfg.num_kv_heads, cfg.resolved_head_dim)
+    vh = v.reshape(*memory.shape[:-1], cfg.num_kv_heads, cfg.resolved_head_dim)
+    return {"k": kh, "v": vh}
+
+
+def _cached_cross_attention(p, cfg: ArchConfig, x, xkv, gated: bool):
+    b = x.shape[0]
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, x.shape[1], cfg.num_heads, cfg.resolved_head_dim)
+    if cfg.qk_norm:
+        from repro.models.layers import rms_head_norm
+        q = rms_head_norm(p["qnorm"], q)
+    scores = attn._gqa_scores(q, xkv["k"]).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = attn._gqa_out(probs, xkv["v"], cfg.num_heads)
+    out = out.reshape(b, x.shape[1], -1) @ p["wo"]
+    if gated:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return out
+
+
+def apply_layer_prefill(p, cfg, spec, x, positions, memory, cache,
+                        gated_cross: bool):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    newc = dict(cache)
+    if spec.mixer == "attn":
+        mix, newc["kv"] = attn.prefill_attention(p["mixer"], cfg, h, positions,
+                                                 cache["kv"],
+                                                 use_rope=cfg.use_rope)
+    elif spec.mixer == "mla":
+        mix = mla_mod.mla_self_attention(p["mixer"], cfg, h, positions)
+        c_kv, k_rope = mla_mod._latents(p["mixer"], cfg, h, positions)
+        length = cache["kv"]["c_kv"].shape[1]
+        newc["kv"] = {
+            "c_kv": jax.lax.dynamic_update_slice(
+                cache["kv"]["c_kv"], c_kv[:, -length:], (0, 0, 0)),
+            "k_rope": jax.lax.dynamic_update_slice(
+                cache["kv"]["k_rope"], k_rope[:, -length:], (0, 0, 0))}
+    elif spec.mixer == "ssd":
+        mix, state = ssd_mod.ssd_forward(p["mixer"], cfg, h)
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        _, xbc, _ = ssd_mod._split_proj(p["mixer"], cfg, h)
+        newc["ssm"] = {"state": state.astype(jnp.float32),
+                       "conv": xbc[:, -(cfg.ssm_conv - 1):]}
+    elif spec.mixer == "rglru":
+        mix, state = rglru_mod.rglru_forward(p["mixer"], cfg, h)
+        xr = h @ p["mixer"]["in_rec"]
+        newc["lru"] = {"state": state, "conv": xr[:, -(cfg.conv1d_width - 1):]}
+    elif spec.mixer == "xattn":
+        newc["xkv"] = _fill_xkv(p["mixer"], cfg, memory)
+        mix = _cached_cross_attention(p["mixer"], cfg, h, newc["xkv"],
+                                      gated_cross)
+    x = x + mix
+    if spec.cross:
+        newc["xkv"] = _fill_xkv(p["xattn"], cfg, memory)
+        xh = apply_norm(p["lnx"], x, cfg.norm)
+        x = x + _cached_cross_attention(p["xattn"], cfg, xh, newc["xkv"], False)
+    if spec.ffn != "none":
+        fh = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.ffn == "moe":
+            f, _ = moe_mod.apply_moe(p["ffn"], cfg, fh, dropless=True)
+        else:
+            f = apply_mlp(p["ffn"], fh, cfg.act)
+        x = x + f
+    return x, newc
+
+
+def apply_layer_decode(p, cfg, spec, x, cache, pos, gated_cross: bool):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    newc = dict(cache)
+    if spec.mixer == "attn":
+        mix, newc["kv"] = attn.decode_attention(p["mixer"], cfg, h,
+                                                cache["kv"], pos,
+                                                use_rope=cfg.use_rope)
+    elif spec.mixer == "mla":
+        mix, newc["kv"] = mla_mod.mla_decode(p["mixer"], cfg, h,
+                                             cache["kv"], pos)
+    elif spec.mixer == "ssd":
+        mix, newc["ssm"] = ssd_mod.ssd_decode(p["mixer"], cfg, h, cache["ssm"])
+    elif spec.mixer == "rglru":
+        mix, newc["lru"] = rglru_mod.rglru_decode(p["mixer"], cfg, h,
+                                                  cache["lru"])
+    elif spec.mixer == "xattn":
+        mix = _cached_cross_attention(p["mixer"], cfg, h, cache["xkv"],
+                                      gated_cross)
+    x = x + mix
+    if spec.cross:
+        xh = apply_norm(p["lnx"], x, cfg.norm)
+        x = x + _cached_cross_attention(p["xattn"], cfg, xh, cache["xkv"], False)
+    if spec.ffn != "none":
+        fh = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.ffn == "moe":
+            f, _ = moe_mod.apply_moe(p["ffn"], cfg, fh, dropless=True)
+        else:
+            f = apply_mlp(p["ffn"], fh, cfg.act)
+        x = x + f
+    return x, newc
+
+
+# ------------------------------------------------------------------ model
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    """Decoder-only / encoder-decoder LM over the assigned arch pool."""
+
+    cfg: ArchConfig
+
+    # ------------- construction -------------
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    @property
+    def groups(self) -> list[tuple[LayerSpec, int]]:
+        return group_specs(decoder_layer_specs(self.cfg))
+
+    @property
+    def encoder_groups(self) -> list[tuple[LayerSpec, int]]:
+        if not self.cfg.is_encdec:
+            return []
+        spec = LayerSpec("attn", False, "dense", causal=False)
+        return [(spec, self.cfg.encoder_layers)]
+
+    def init_params(self, key) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embed": init_embed(keys[0], dtype, cfg.padded_vocab, cfg.d_model),
+            "final_norm": init_norm(dtype, cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": make_dense(keys[1],
+                                              (cfg.d_model, cfg.padded_vocab),
+                                              dtype, scale=0.02)}
+
+        def stack_init(spec, n, key):
+            if n == 1:
+                return init_layer(key, cfg, spec, dtype)
+            return jax.vmap(lambda k: init_layer(k, cfg, spec, dtype))(
+                jax.random.split(key, n))
+
+        params["layers"] = [stack_init(spec, n, jax.random.fold_in(keys[2], i))
+                            for i, (spec, n) in enumerate(self.groups)]
+        if cfg.is_encdec:
+            params["enc_layers"] = [
+                stack_init(spec, n, jax.random.fold_in(keys[3], i))
+                for i, (spec, n) in enumerate(self.encoder_groups)]
+            params["enc_norm"] = init_norm(dtype, cfg.d_model, cfg.norm)
+        return params
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {
+            "embed": embed_spec(),
+            "final_norm": norm_spec(cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            specs["head"] = {"w": P(None, "model")}
+
+        def stacked(spec, n):
+            tree = layer_spec_tree(cfg, spec)
+            if n == 1:
+                return tree
+            return jax.tree.map(
+                lambda ps: P(*((None,) + tuple(ps))), tree,
+                is_leaf=lambda x: isinstance(x, P))
+
+        specs["layers"] = [stacked(spec, n) for spec, n in self.groups]
+        if cfg.is_encdec:
+            specs["enc_layers"] = [stacked(spec, n)
+                                   for spec, n in self.encoder_groups]
+            specs["enc_norm"] = norm_spec(cfg.norm)
+        return specs
+
+    # ------------- embedding / memory -------------
+
+    def _embed(self, params, tokens, positions):
+        cfg = self.cfg
+        x = apply_embed(params["embed"], tokens)
+        x = constrain(x, "residual")
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+        if not cfg.use_rope:
+            pe = jnp.asarray(sinusoidal_positions(int(1), cfg.d_model))
+            # computed on the fly from positions (supports decode at any pos)
+            pos_emb = _sinusoid_at(positions, cfg.d_model).astype(x.dtype)
+            x = x + pos_emb
+        return x
+
+    def _encode(self, params, memory_embed):
+        """Run the (whisper) encoder over stubbed frame embeddings."""
+        cfg = self.cfg
+        s = memory_embed.shape[1]
+        pe = _sinusoid_at(jnp.arange(s)[None], cfg.d_model)
+        x = memory_embed + pe.astype(memory_embed.dtype)
+        for gp, (spec, n) in zip(params["enc_layers"], self.encoder_groups):
+            x = self._group_forward(gp, spec, n, x,
+                                    jnp.arange(s), None)[0]
+        return apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def _memory(self, params, batch):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return self._encode(params, batch["audio_embed"])
+        if cfg.num_image_tokens:
+            return batch["image_embed"]
+        return None
+
+    # ------------- grouped execution -------------
+
+    def _group_forward(self, gp, spec, n, x, positions, memory,
+                       moe_dropless=False):
+        cfg = self.cfg
+        gated = bool(cfg.cross_attn_every)
+
+        def body(carry, lp):
+            carry = constrain(carry, "residual")
+            out, aux = apply_layer(lp, cfg, spec, carry, positions, memory,
+                                   gated, moe_dropless)
+            return constrain(out, "residual"), aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if n == 1:
+            x, aux = body(x, gp)
+            return x, aux
+        x, auxs = jax.lax.scan(body, x, gp)
+        return x, jnp.sum(auxs)
+
+    # ------------- public entry points -------------
+
+    def forward_logits(self, params, batch, moe_dropless=False):
+        """Full-sequence forward -> (logits, moe_aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1])
+        memory = self._memory(params, batch)
+        x = self._embed(params, tokens, positions[None])
+        aux_total = jnp.zeros((), jnp.float32)
+        for gp, (spec, n) in zip(params["layers"], self.groups):
+            x, aux = self._group_forward(gp, spec, n, x, positions, memory,
+                                         moe_dropless)
+            aux_total = aux_total + aux
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return self._logits(params, x), aux_total
+
+    def loss_fn(self, params, batch):
+        """Training forward + causal CE loss. batch: tokens, labels [+stubs]."""
+        logits, aux_total = self.forward_logits(params, batch)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32),
+            labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        loss = jnp.mean(lse - ll)
+        return loss + MOE_AUX_COEF * aux_total
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            logits = x @ params["embed"]["table"].T
+        else:
+            logits = x @ params["head"]["w"]
+        logits = constrain(logits, "logits")
+        if self.cfg.padded_vocab != self.cfg.vocab_size:
+            pad_mask = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab_size
+            logits = jnp.where(pad_mask, logits, -1e30)
+        return logits
+
+    # ------------- serving -------------
+
+    def init_caches(self, batch: int, max_len: int):
+        dtype = self.dtype
+        caches = []
+        for spec, n in self.groups:
+            one = lambda: init_layer_cache(self.cfg, spec, batch, max_len,
+                                           dtype)
+            if n == 1:
+                caches.append(one())
+            else:
+                caches.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n,) + x.shape), one()))
+        return caches
+
+    def cache_specs(self, shard_kv_heads: bool):
+        out = []
+        for spec, n in self.groups:
+            tree = layer_cache_spec(self.cfg, spec, shard_kv_heads)
+            if n > 1:
+                tree = jax.tree.map(
+                    lambda ps: P(*((None,) + tuple(ps))), tree,
+                    is_leaf=lambda x: isinstance(x, P))
+            out.append(tree)
+        return out
+
+    def prefill(self, params, batch, caches):
+        """Run the full prompt, filling caches; returns (last_logits, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1])
+        memory = self._memory(params, batch)
+        x = self._embed(params, tokens, positions[None])
+        gated = bool(cfg.cross_attn_every)
+        new_caches = []
+        for gp, cache, (spec, n) in zip(params["layers"], caches, self.groups):
+            def body(carry, xs):
+                lp, c = xs
+                carry = constrain(carry, "residual")
+                out, newc = apply_layer_prefill(lp, cfg, spec, carry,
+                                                positions, memory, c, gated)
+                return constrain(out, "residual"), newc
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            if n == 1:
+                x, newc = body(x, (gp, cache))
+            else:
+                x, newc = jax.lax.scan(body, x, (gp, cache))
+            new_caches.append(newc)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return self._logits(params, x[:, -1:]), new_caches
+
+    def decode_step(self, params, token, caches, pos, batch_extras=None):
+        """One serve step: token (B,1) at absolute position `pos`."""
+        cfg = self.cfg
+        posv = jnp.full((token.shape[0], 1), pos)
+        x = self._embed(params, token, posv)
+        gated = bool(cfg.cross_attn_every)
+        new_caches = []
+        for gp, cache, (spec, n) in zip(params["layers"], caches, self.groups):
+            def body(carry, xs):
+                lp, c = xs
+                carry = constrain(carry, "residual")
+                out, newc = apply_layer_decode(lp, cfg, spec, carry, c, pos,
+                                               gated)
+                return constrain(out, "residual"), newc
+            if n == 1:
+                x, newc = body(x, (gp, cache))
+            else:
+                x, newc = jax.lax.scan(body, x, (gp, cache))
+            new_caches.append(newc)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return self._logits(params, x), new_caches
+
+
+def _sinusoid_at(positions, dim):
+    """Sinusoidal embedding evaluated at given positions: (..., S) -> (..., S, dim)."""
+    half = dim // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    inv = 1.0 / (10000.0 ** (2 * i / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    out = jnp.zeros(positions.shape + (dim,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    out = out.at[..., 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN with top-k token-choice routing and capacity-bound
+dispatch (gather → grouped expert GEMM → weighted scatter-add).
+
+Dispatch is expressed as dense gathers so it lowers cleanly under SPMD with
+experts sharded on the `model` mesh axis (expert parallelism → the gathers
+become all-to-alls, the paper-typical MoE communication pattern).  Capacity
+dropping is weight-prioritized (per-expert top-C over routed tokens), the
+standard TPU-friendly formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_mlp, init_mlp, make_dense, mlp_spec
+from repro.models.shardctx import constrain
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": make_dense(ks[0], (d, e), dtype, scale=0.02),
+        "wi": make_dense(ks[1], (e, d, f), dtype),
+        "wg": make_dense(ks[2], (e, d, f), dtype),
+        "wo": make_dense(ks[3], (e, f, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], dtype, d,
+                               f * cfg.num_shared_experts, act="swiglu")
+    return p
+
+
+def moe_spec(cfg: ArchConfig):
+    p = {"router": P(None, None),
+         "wi": P("model", None, None),
+         "wg": P("model", None, None),
+         "wo": P("model", None, None)}
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_spec(act="swiglu")
+    return p
+
+
+def apply_moe(p, cfg: ArchConfig, x, dropless: bool = False):
+    """x: (B, S, D) -> (B, S, D); also returns aux (load-balance stats).
+
+    dropless=True sets capacity = num tokens (exact, no dropping) — used on
+    the decode path where a dropped token would corrupt generation.
+
+    cfg.moe_groups > 1 routes within token groups (GShard-style device-local
+    capacity): the dispatch gather/scatter stays shard-local under SPMD,
+    replacing a full-tensor all-reduce per layer with local movement. With
+    dropless=True grouped and global routing are exactly equivalent.
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, min(cfg.moe_groups, t))
+    if g > 1 and t % g == 0:
+        out, aux = _moe_grouped(p, cfg, x.reshape(g, t // g, d), dropless)
+        return out.reshape(b, s, d).astype(x.dtype), aux
+    out, aux = _moe_block(p, cfg, x.reshape(t, d), dropless)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_grouped(p, cfg: ArchConfig, xg, dropless: bool):
+    """Group-local routing, written natively in 4D so SPMD keeps the
+    dispatch gather/scatter local to each token group (= data shard) and
+    the expert GEMMs sharded over the `model` axis."""
+    g, tg, d = xg.shape
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    xg = constrain(xg, "moe_tokens")                           # (G,Tg,D)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)            # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                     # (G,Tg,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    combine = jnp.zeros((g, tg, e), jnp.float32)
+    gi = jnp.arange(g)[:, None, None]
+    ti = jnp.arange(tg)[None, :, None]
+    combine = combine.at[gi, ti, top_i].set(top_w)             # (G,Tg,E)
+
+    if dropless:
+        cap = tg
+    else:
+        cap = int(max(1, round(tg * k / e * cfg.capacity_factor)))
+        cap = min(cap, tg)
+    score = jnp.where(combine > 0, combine, -1.0)
+    score = jnp.swapaxes(score, 1, 2)                          # (G,E,Tg)
+    sel_w, sel_t = jax.lax.top_k(score, cap)                   # (G,E,C)
+    valid = sel_w > 0
+
+    gathered = jnp.take_along_axis(xg[:, None], sel_t[..., None], axis=2)
+    gathered = constrain(gathered, "moe_gathered")             # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", gathered, p["wi"])
+    hh = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", gathered, p["wg"])
+    y = jnp.einsum("gecf,efd->gecd", hh, p["wo"])
+    y = constrain(y, "moe_gathered")
+    y = y * (sel_w * valid)[..., None].astype(y.dtype)
+
+    out = jnp.zeros((g, tg, d), y.dtype)
+    out = out.at[gi[..., None], sel_t[..., None],
+                 jnp.arange(d)[None, None, None]].add(y)
+    out = constrain(out, "moe_tokens")
+
+    if cfg.num_shared_experts:
+        out = out + apply_mlp(p["shared"], xg, act="swiglu")
+
+    density = jnp.mean((combine > 0).astype(jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux_loss = e * jnp.sum(density * mean_prob)
+    return out, aux_loss
+
+
+def _moe_block(p, cfg: ArchConfig, xf, dropless: bool):
+    """Routing + expert compute for one token block xf: (T, D)."""
+    t, d = xf.shape
+    e, k = cfg.num_experts, cfg.experts_per_tok
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                    # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # (T, E) combine weights restricted to the top-k choices
+    combine = jnp.zeros((t, e), jnp.float32)
+    combine = combine.at[jnp.arange(t)[:, None], top_i].set(top_w)
+
+    # capacity: per-expert top-C tokens by combine weight
+    if dropless:
+        cap = t
+    else:
+        cap = int(max(1, round(t * k / e * cfg.capacity_factor)))
+        cap = min(cap, t)
+    score = jnp.where(combine.T > 0, combine.T, -1.0)         # (E, T)
+    sel_w, sel_t = jax.lax.top_k(score, cap)                  # (E, C)
+    valid = sel_w > 0
+
+    gathered = constrain(xf[sel_t], "moe_expert")             # (E, C, D)
+    h = jnp.einsum("ecd,edf->ecf", gathered, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", gathered, p["wg"])
+    h = jax.nn.silu(h) * g
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # (E, C, D)
+    y = constrain(y, "moe_expert")
+    y = y * (sel_w * valid)[..., None].astype(y.dtype)
+
+    out = jnp.zeros((t, d), y.dtype).at[sel_t.reshape(-1)].add(
+        y.reshape(e * cap, d))
+
+    if cfg.num_shared_experts:
+        out = out + apply_mlp(p["shared"], xf, act="swiglu")
+
+    # aux stats for the load-balance loss (Switch-style)
+    density = jnp.mean((combine > 0).astype(jnp.float32), axis=0)   # frac routed
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(density * mean_prob)
+    return out, aux_loss

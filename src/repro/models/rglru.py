@@ -1,0 +1,102 @@
+"""RecurrentGemma recurrent block — RG-LRU (arXiv:2402.19427).
+
+Block: x -> (gate branch: linear+GeLU) ⊙ (recurrent branch: linear ->
+causal conv1d -> RG-LRU) -> output linear.
+
+RG-LRU per channel:
+  r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+  log a_t = -c · softplus(Λ) · r_t          (c = 8)
+  h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Training uses an associative scan over the length axis (sub-quadratic,
+parallel); decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import make_dense
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "in_gate": make_dense(ks[0], (d, w), dtype),
+        "in_rec": make_dense(ks[1], (d, w), dtype),
+        "conv_w": make_dense(ks[2], (cfg.conv1d_width, w), dtype, scale=0.2),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": make_dense(ks[3], (w, w), dtype),
+        "w_i": make_dense(ks[4], (w, w), dtype),
+        "lam": jnp.full((w,), 0.7, jnp.float32),   # Λ init within (0,1) band
+        "out": make_dense(ks[5], (w, d), dtype),
+    }
+
+
+def rglru_spec(cfg: ArchConfig):
+    return {"in_gate": P(None, "model"), "in_rec": P(None, "model"),
+            "conv_w": P(None, "model"), "conv_b": P("model"),
+            "w_r": P(None, "model"), "w_i": P(None, "model"),
+            "lam": P("model"), "out": P("model", None)}
+
+
+def _conv(p, x):
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1]] * p["conv_w"][i]
+               for i in range(k)) + p["conv_b"]
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12, None))
+    return a, mult * i * x.astype(jnp.float32)
+
+
+def rglru_forward(p, cfg: ArchConfig, u):
+    """(B, L, D) -> (B, L, D); returns final recurrent state (B, W)."""
+    gate = jax.nn.gelu(u @ p["in_gate"])
+    x = _conv(p, u @ p["in_rec"])
+    a, b = _gates(p, x)                    # (B, L, W) f32 each
+
+    # associative scan of h_t = a_t h_{t-1} + b_t
+    def comb(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    state = h[:, -1]
+    y = (h.astype(u.dtype) * gate) @ p["out"]
+    return y, state
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {"state": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}
+
+
+def rglru_cache_spec(cfg: ArchConfig):
+    return {"state": P("data", "model"), "conv": P("data", None, "model")}
+
+
+def rglru_decode(p, cfg: ArchConfig, u, cache):
+    gate = jax.nn.gelu(u @ p["in_gate"])              # (B, 1, W)
+    xr = u @ p["in_rec"]
+    hist = jnp.concatenate([cache["conv"], xr], axis=1)
+    x = (jnp.sum(hist * p["conv_w"][None], axis=1, keepdims=True)
+         + p["conv_b"])
+    a, b = _gates(p, x)                               # (B, 1, W)
+    state = a[:, 0] * cache["state"] + b[:, 0]
+    y = (state[:, None].astype(u.dtype) * gate) @ p["out"]
+    return y, {"state": state, "conv": hist[:, 1:]}

@@ -1,0 +1,36 @@
+"""Activation-sharding rules, injected contextually.
+
+The baseline dry-run lets GSPMD propagate shardings from params/inputs
+alone. The §Perf-optimized configuration installs explicit rules
+(Megatron-style: residual stream data-sharded and replicated over `model`;
+logits vocab-sharded), applied via `constrain()` calls inside the model.
+Rules default to None so tests and single-device runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "shard_rules", default=None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: dict | None):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def constrain(x, name: str):
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sh = rules.get(name)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

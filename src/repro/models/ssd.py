@@ -1,0 +1,198 @@
+"""Mamba-2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD algorithm: within-chunk attention-like dual form + inter-chunk
+recurrence over chunk states via `lax.scan` (sequential in the number of
+chunks only).  Decode is the pure recurrent form with a (B, H, P, N) state
+and a conv ring buffer.
+
+Shapes: d_inner = expand·d_model, H = d_inner/headdim heads, P = headdim,
+N = ssm_state, G = ssm_groups (B/C shared across H/G heads per group).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import make_dense
+
+
+def init_ssd(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_nheads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * g * n + h        # [z, x, B, C, dt]
+    return {
+        "in_proj": make_dense(ks[0], (d, proj_out), dtype),
+        "conv_w": make_dense(ks[1], (cfg.ssm_conv, conv_ch), dtype, scale=0.2),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": make_dense(ks[2], (di, d), dtype),
+        "norm_scale": jnp.ones((di,), dtype),   # gated RMSNorm before out_proj
+    }
+
+
+def ssd_spec(cfg: ArchConfig):
+    return {"in_proj": P(None, "model"), "conv_w": P(None, "model"),
+            "conv_b": P("model"), "a_log": P("model"), "dt_bias": P("model"),
+            "d_skip": P("model"), "out_proj": P("model", None),
+            "norm_scale": P("model")}
+
+
+def _split_proj(p, cfg: ArchConfig, u):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    zxbcdt = u @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv1d, width K: y_t = sum_k w_k x_{t-K+1+k}."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * p["conv_w"][i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * p["norm_scale"].astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def ssd_forward(p, cfg: ArchConfig, u):
+    """Training/prefill: (B, L, D) -> (B, L, D), returns final ssm state."""
+    bsz, L0, _ = u.shape
+    di, g, n, h, hp = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                       cfg.ssm_nheads, cfg.ssm_headdim)
+    q = cfg.ssm_chunk
+    # pad ragged tails; padded steps get dt=0 (decay 1, contribution 0) so
+    # the final state equals the state at the last real token.
+    L = -(-L0 // q) * q
+    pad = L - L0
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    nc = L // q
+
+    z, xbc, dt = _split_proj(p, cfg, u)
+    xbc = _causal_conv(p, xbc)
+    x = xbc[..., :di].reshape(bsz, L, h, hp)
+    b_in = xbc[..., di:di + g * n].reshape(bsz, L, g, n)
+    c_in = xbc[..., di + g * n:].reshape(bsz, L, g, n)
+    # broadcast groups over heads
+    rep = h // g
+    b_h = jnp.repeat(b_in, rep, axis=2)          # (B, L, H, N)
+    c_h = jnp.repeat(c_in, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, H)
+    if pad:
+        live = (jnp.arange(L) < L0).astype(dt.dtype)
+        dt = dt * live[None, :, None]
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    dta = dt * a                                                  # log decay
+    xdt = x * dt[..., None].astype(x.dtype)                       # dt-scaled input
+
+    # chunk views
+    def chunks(t, d_extra):
+        return t.reshape((bsz, nc, q) + t.shape[2:])
+    xc = chunks(xdt, 2)                    # (B, C#, Q, H, P)
+    bc = chunks(b_h, 2)                    # (B, C#, Q, H, N)
+    cc = chunks(c_h, 2)
+    dtac = dta.reshape(bsz, nc, q, h)      # (B, C#, Q, H)
+
+    seg = jnp.cumsum(dtac, axis=2)                             # (B,C#,Q,H)
+    seg_last = seg[:, :, -1:]                                  # (B,C#,1,H)
+
+    # intra-chunk (dual / attention-like) term
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]        # (B,C#,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc) * decay.astype(cc.dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # chunk states: S_c = sum_j exp(seg_last - seg_j) * x_j ⊗ B_j
+    w = jnp.exp(seg_last - seg)                                # (B,C#,Q,H)
+    states = jnp.einsum("bcjh,bcjhp,bcjhn->bchpn", w.astype(xc.dtype), xc,
+                        bc).astype(jnp.float32)
+
+    # inter-chunk recurrence over chunk states (f32 carry for stability and
+    # so the scan carry dtype is invariant under bf16 activations)
+    chunk_decay = jnp.exp(seg_last[:, :, 0]).astype(jnp.float32)  # (B,C#,H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((bsz, h, hp, n), states.dtype)
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                      # (B,C#,H,P,N)
+
+    # inter-chunk contribution: C_i · (exp(seg_i) * S_prev)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp",
+                         cc * jnp.exp(seg)[..., None].astype(cc.dtype),
+                         s_prevs.astype(cc.dtype))
+
+    y = (y_intra + y_inter).reshape(bsz, L, h, hp)
+    y = y + x * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, L, di)
+    y = _gated_norm(p, y, z)
+    out = y @ p["out_proj"]
+    if pad:
+        out = out[:, :L0]
+    return out, s_final
+
+
+# --------------------------------------------------------------- decode
+
+def init_ssd_cache(cfg: ArchConfig, batch: int, dtype):
+    h, hp, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {"state": jnp.zeros((batch, h, hp, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype)}
+
+
+def ssd_cache_spec(cfg: ArchConfig):
+    return {"state": P("data", "model", None, None),
+            "conv": P("data", None, "model")}
+
+
+def ssd_decode(p, cfg: ArchConfig, u, cache):
+    """One token: u (B, 1, D) -> (B, 1, D); updates (state, conv ring)."""
+    bsz = u.shape[0]
+    di, g, n, h, hp = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                       cfg.ssm_nheads, cfg.ssm_headdim)
+    z, xbc, dt = _split_proj(p, cfg, u)
+    # conv over (cached K-1 inputs, current)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)       # (B, K, ch)
+    k = p["conv_w"].shape[0]
+    conv_out = jnp.sum(hist * p["conv_w"][None], axis=1, keepdims=True)
+    xbc_t = jax.nn.silu(conv_out + p["conv_b"])
+    new_conv = hist[:, 1:]
+
+    x = xbc_t[..., :di].reshape(bsz, h, hp)
+    b_t = jnp.repeat(xbc_t[..., di:di + g * n].reshape(bsz, g, n), h // g, 1)
+    c_t = jnp.repeat(xbc_t[..., di + g * n:].reshape(bsz, g, n), h // g, 1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["a_log"]))                              # decay
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    state = (cache["state"] * a[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", xdt, b_t.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", c_t.astype(jnp.float32), state)
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = _gated_norm(p, y, z)
+    return y @ p["out_proj"], {"state": state, "conv": new_conv}

@@ -1,0 +1,9 @@
+"""Optimizers and LR schedules (self-contained; no optax offline)."""
+from repro.optim.optimizers import (Optimizer, adam, adamw, sgd,
+                                    constant_schedule, cosine_schedule,
+                                    linear_warmup_cosine, global_norm,
+                                    clip_by_global_norm)
+
+__all__ = ["Optimizer", "adam", "adamw", "sgd", "constant_schedule",
+           "cosine_schedule", "linear_warmup_cosine", "global_norm",
+           "clip_by_global_norm"]

@@ -1,0 +1,142 @@
+"""Minimal, jit-friendly optimizer library (optax-style pure functions).
+
+The paper trains every model with Adam (Tab. 3); AdamW/SGD are provided for
+the transformer architectures and ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        wu = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, wu, cos(step - warmup))
+    return f
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict          # first moment (or momentum)
+    nu: dict          # second moment (empty dict for sgd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """apply(params, grads, state) -> (new_params, new_state)."""
+
+    init: Callable
+    apply: Callable
+    name: str = "opt"
+
+
+def adam(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         max_grad_norm: float | None = None, decoupled: bool = False) -> Optimizer:
+    if not callable(schedule):
+        schedule = constant_schedule(float(schedule))
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=z,
+                        nu=jax.tree.map(jnp.zeros_like, z))
+
+    def apply(params, grads, state: OptState):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = schedule(step)
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / b1t
+            vhat = v / b2t
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                if decoupled:       # AdamW
+                    delta = delta + weight_decay * p.astype(jnp.float32)
+                else:               # L2-coupled
+                    delta = delta + 0.0  # coupled decay folded into grads upstream
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, apply=apply,
+                     name="adamw" if decoupled and weight_decay else "adam")
+
+
+def adamw(schedule, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(schedule, weight_decay=weight_decay, decoupled=True, **kw)
+
+
+def sgd(schedule: Schedule | float, momentum: float = 0.0,
+        max_grad_norm: float | None = None) -> Optimizer:
+    if not callable(schedule):
+        schedule = constant_schedule(float(schedule))
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu={})
+
+    def apply(params, grads, state: OptState):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = schedule(step)
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (tdef.unflatten([o[0] for o in out]),
+                OptState(step=step, mu=tdef.unflatten([o[1] for o in out]), nu={}))
+
+    return Optimizer(init=init, apply=apply, name="sgd")

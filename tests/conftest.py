@@ -1,0 +1,24 @@
+import os
+import sys
+
+# Tests must see exactly 1 real device (the dry-run is the ONLY place that
+# forces 512); guard against accidental inheritance.
+os.environ.pop("XLA_FLAGS", None) if "force_host_platform" in \
+    os.environ.get("XLA_FLAGS", "") else None
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_pipeline():
+    from repro.data import GraphDataPipeline
+    return GraphDataPipeline.build("tiny", num_parts=4, kind="sage")
+
+
+@pytest.fixture(scope="session")
+def tiny_pipeline_gcn():
+    from repro.data import GraphDataPipeline
+    return GraphDataPipeline.build("tiny", num_parts=4, kind="gcn")

@@ -1,0 +1,59 @@
+"""Analytic cost model sanity: parameter counts vs known model sizes, FLOPs
+vs 6·N·D for dense training, cache sizing."""
+import pytest
+
+from repro.analysis.cost import analytic_cost, _cache_bytes
+from repro.configs import get_arch
+from repro.models.config import INPUT_SHAPES
+
+
+KNOWN_PARAMS_B = {          # published totals (±15%: padded vocab, heads)
+    "qwen3-8b": 8.2,
+    "qwen1.5-32b": 32.5,
+    "codeqwen1.5-7b": 7.3,
+    "deepseek-v2-236b": 236.0,
+    "starcoder2-3b": 3.0,
+    "mamba2-780m": 0.78,
+    "recurrentgemma-2b": 2.7,
+    "granite-moe-1b-a400m": 1.3,
+    "llama-3.2-vision-11b": 9.8,   # language tower only (vision stubbed)
+}
+
+
+@pytest.mark.parametrize("arch_id,known", sorted(KNOWN_PARAMS_B.items()))
+def test_param_counts_match_published(arch_id, known):
+    cost = analytic_cost(get_arch(arch_id), INPUT_SHAPES["train_4k"])
+    got = cost["params_total"] / 1e9
+    assert known * 0.8 < got < known * 1.25, (arch_id, got, known)
+
+
+def test_train_flops_close_to_6nd():
+    cfg = get_arch("qwen3-8b")
+    shape = INPUT_SHAPES["train_4k"]
+    cost = analytic_cost(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    six_nd = 6.0 * cost["params_total"] * tokens
+    # 4x-forward accounting (fwd+bwd+remat) ≈ 8/6 of 6ND, plus attention
+    ratio = cost["flops_global"] / six_nd
+    assert 1.0 < ratio < 2.5, ratio
+
+
+def test_decode_flops_much_smaller_than_train():
+    cfg = get_arch("qwen3-8b")
+    tr = analytic_cost(cfg, INPUT_SHAPES["train_4k"])["flops_global"]
+    de = analytic_cost(cfg, INPUT_SHAPES["decode_32k"])["flops_global"]
+    assert de < tr / 1000
+
+
+def test_mla_cache_much_smaller_than_mha():
+    """DeepSeek's MLA latent cache ≈ (512+64)/ (2·128·128) of standard MHA."""
+    ds = get_arch("deepseek-v2-236b")
+    qw = get_arch("qwen1.5-32b")
+    ds_bytes = _cache_bytes(ds, 1, 32768) / ds.num_layers
+    qw_bytes = _cache_bytes(qw, 1, 32768) / qw.num_layers
+    assert ds_bytes < qw_bytes / 10
+
+
+def test_ssm_cache_constant_in_length():
+    cfg = get_arch("mamba2-780m")
+    assert _cache_bytes(cfg, 1, 1024) == _cache_bytes(cfg, 1, 524288)

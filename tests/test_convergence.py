@@ -1,0 +1,41 @@
+"""Paper-claim validation at test scale (Tab. 4 analogue): every PipeGCN
+variant reaches vanilla-level accuracy on a community graph; convergence is
+not degraded beyond the paper's observed band."""
+import numpy as np
+import pytest
+
+from repro.core import ModelConfig, PipeConfig, train_pipegcn
+from repro.data import GraphDataPipeline
+
+
+@pytest.fixture(scope="module")
+def trained():
+    pipeline = GraphDataPipeline.build("tiny", num_parts=4, kind="sage")
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=32, num_layers=2,
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+    out = {}
+    for name in ("vanilla", "pipegcn", "pipegcn-gf"):
+        res = train_pipegcn(pipeline, mc, PipeConfig.named(name, gamma=0.5),
+                            epochs=120, lr=0.01, eval_every=60)
+        out[name] = res
+    return out
+
+
+def test_all_variants_learn(trained):
+    for name, res in trained.items():
+        assert res.final_metrics["test"] > 0.9, (name, res.final_metrics)
+
+
+def test_pipegcn_matches_vanilla_accuracy(trained):
+    """Paper Tab. 4: staleness costs at most ~0.3 accuracy points."""
+    v = trained["vanilla"].final_metrics["test"]
+    for name in ("pipegcn", "pipegcn-gf"):
+        assert trained[name].final_metrics["test"] >= v - 0.03, (
+            name, trained[name].final_metrics, v)
+
+
+def test_loss_decreases(trained):
+    for name, res in trained.items():
+        hist = res.history["loss"]
+        assert hist[-1] < hist[0] * 0.5, (name, hist)

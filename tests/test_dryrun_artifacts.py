@@ -1,0 +1,53 @@
+"""Gates on the dry-run artifacts (produced by repro.launch.dryrun, which
+forces 512 host devices and therefore runs standalone, not under pytest).
+Skipped if the artifacts have not been generated yet."""
+import json
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not generated (run python -m repro.launch.dryrun)")
+    return json.load(open(path))
+
+
+@pytest.mark.parametrize("mesh,chips", [("16x16", 256), ("2x16x16", 512)])
+def test_all_40_combos_compiled(mesh, chips):
+    rows = _load(f"dryrun_{mesh}.json")
+    assert len(rows) == 40
+    errors = [r for r in rows if "error" in r]
+    assert not errors, errors[:2]
+    archs = {r["arch"] for r in rows}
+    shapes = {r["shape"] for r in rows}
+    assert len(archs) == 10 and len(shapes) == 4
+    for r in rows:
+        assert r["chips"] == chips
+        assert r["compile_s"] > 0
+        assert r["t_compute"] >= 0 and r["t_memory"] > 0
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_roofline_terms_sane():
+    rows = _load("dryrun_16x16.json")
+    for r in rows:
+        if r["mode"] == "train":
+            # MODEL_FLOPS/analytic ratio in a sane band (0.2-1.3)
+            assert 0.2 < r["model_flops_ratio"] < 1.3, (
+                r["arch"], r["shape"], r["model_flops_ratio"])
+        if r["mode"] == "decode":
+            # decode must never be compute-bound at these batch sizes
+            assert r["bottleneck"] != "compute", (r["arch"], r["shape"])
+
+
+def test_pipegcn_production_dryrun():
+    for name, chips in (("dryrun_pipegcn_16x16.json", 256),
+                        ("dryrun_pipegcn_2x16x16.json", 512)):
+        rows = _load(name)
+        for r in rows:
+            assert r["chips"] == chips
+            assert r["collective_bytes_per_device"]["all-to-all"] > 0

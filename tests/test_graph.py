@@ -1,0 +1,117 @@
+"""Graph substrate: CSR, normalization, partitioner invariants, halo builder."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (build_partitioned_graph, coo_to_csr, make_dataset,
+                         partition_graph)
+from repro.graph.csr import mean_normalized, sym_normalized, symmetrize
+from repro.graph.partition import comm_volume, edge_cut
+
+
+def random_graph(n, avg_deg, seed):
+    rng = np.random.default_rng(seed)
+    m = max(int(n * avg_deg / 2), 1)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    return symmetrize(coo_to_csr(src[keep], dst[keep], n))
+
+
+def test_sym_normalization_rows():
+    g = random_graph(64, 6, 0)
+    p = sym_normalized(g)
+    dense = p.to_dense()
+    # symmetric and spectral radius <= 1 for D^-1/2 A~ D^-1/2
+    assert np.allclose(dense, dense.T, atol=1e-7)
+    w = np.linalg.eigvalsh(dense)
+    assert w.max() <= 1.0 + 1e-6
+
+
+def test_mean_normalization_rows_sum_to_one():
+    g = random_graph(64, 6, 1)
+    p = mean_normalized(g)
+    dense = p.to_dense()
+    rs = dense.sum(1)
+    deg = g.degrees()
+    assert np.allclose(rs[deg > 0], 1.0, atol=1e-6)
+    assert np.allclose(rs[deg == 0], 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(40, 160), parts=st.integers(2, 6),
+       seed=st.integers(0, 10))
+def test_partitioner_invariants(n, parts, seed):
+    g = random_graph(n, 6, seed)
+    part = partition_graph(g, parts, seed=seed)
+    assert part.shape == (n,)
+    assert part.min() >= 0 and part.max() < parts
+    sizes = np.bincount(part, minlength=parts)
+    # balance constraint (allow bfs leftovers slack)
+    assert sizes.max() <= int(n / parts * 1.35) + 2
+
+
+def test_refinement_reduces_cut():
+    g = random_graph(512, 8, 3)
+    rnd = partition_graph(g, 4, seed=0, method="random")
+    ref = partition_graph(g, 4, seed=0, method="bfs+refine")
+    assert edge_cut(g, ref) < edge_cut(g, rnd)
+    assert comm_volume(g, ref, 4) < comm_volume(g, rnd, 4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(48, 128), parts=st.integers(2, 5), seed=st.integers(0, 5))
+def test_partitioned_spmm_exact(n, parts, seed):
+    """Property: padded partitioned COO + halo exchange == dense P @ X."""
+    g = random_graph(n, 5, seed)
+    prop = sym_normalized(g)
+    part = partition_graph(g, parts, seed=seed)
+    pg = build_partitioned_graph(prop, part, parts)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 7))
+    want = prop.to_dense() @ x
+
+    xp = pg.pack_nodes(x)
+    p = pg.num_parts
+    halo = np.zeros((p, p * pg.slot, x.shape[1]))
+    for i in range(p):
+        for j in range(p):
+            sel = xp[j, pg.send_idx[j, i]].copy()
+            sel[~pg.send_mask[j, i]] = 0
+            halo[i, j * pg.slot:(j + 1) * pg.slot] = sel
+    comb = np.concatenate([xp, halo], axis=1)
+    z = np.zeros((p, pg.max_inner, x.shape[1]))
+    for i in range(p):
+        np.add.at(z[i], pg.edge_row[i],
+                  pg.edge_w[i][:, None] * comb[i, pg.edge_col[i]])
+    got = pg.unpack_nodes(z)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_pack_unpack_roundtrip():
+    ds = make_dataset("tiny")
+    part = partition_graph(ds.graph, 4, seed=0)
+    pg = build_partitioned_graph(sym_normalized(ds.graph), part, 4)
+    x = np.arange(ds.num_nodes, dtype=np.float64)
+    assert np.array_equal(pg.unpack_nodes(pg.pack_nodes(x)), x)
+
+
+def test_datasets_registry():
+    for name in ("tiny", "small"):
+        ds = make_dataset(name)
+        assert ds.train_mask.sum() > 0
+        assert not (ds.train_mask & ds.val_mask).any()
+        assert not (ds.train_mask & ds.test_mask).any()
+        if ds.multilabel:
+            assert ds.labels.shape == (ds.num_nodes, ds.num_classes)
+        else:
+            assert ds.labels.max() < ds.num_classes
+
+
+def test_boundary_stats():
+    ds = make_dataset("tiny")
+    part = partition_graph(ds.graph, 4, seed=0)
+    pg = build_partitioned_graph(sym_normalized(ds.graph), part, 4)
+    assert pg.boundary_bytes_per_layer(16) > 0
+    assert 0.0 <= pg.padding_ratio() < 1.0
+    assert pg.halo_counts().sum() == pg.halo_owner_mask.sum()

@@ -1,0 +1,79 @@
+"""Stale-halo transformer (beyond-paper transfer of the paper's technique)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.halo import (HaloConfig, forward, init_halo_buffers,
+                               init_params, make_sim_train_step)
+
+SHARDS, B, S = 4, 2, 32
+
+
+def _setup(stale, smooth=False):
+    cfg = HaloConfig(stale=stale, smooth=smooth, window=16, vocab=32,
+                     d_model=32, num_heads=2, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bufs = init_halo_buffers(cfg, S, B, SHARDS)
+    pos0 = jnp.arange(SHARDS) * S
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (SHARDS, B, S)), jnp.int32)
+    return cfg, params, bufs, pos0, toks
+
+
+def test_sharded_sync_equals_unsharded():
+    """Sync halo across 4 shards == single-shard full sequence."""
+    cfg, params, bufs, pos0, toks = _setup(stale=False)
+    logits4, _ = forward(params, cfg, toks, bufs, pos0)
+    # single shard: same total sequence
+    full = toks.transpose(1, 0, 2).reshape(1, B, SHARDS * S)
+    bufs1 = init_halo_buffers(cfg, SHARDS * S, B, 1)
+    logits1, _ = forward(params, cfg, full, bufs1, jnp.zeros((1,), jnp.int32))
+    got = logits4.transpose(1, 0, 2, 3).reshape(1, B, SHARDS * S, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(logits1),
+                               atol=2e-5)
+
+
+def test_stale_first_step_uses_zero_halo():
+    """PipeGCN Alg.1 line 6 analogue: step 1 boundary = zeros."""
+    cfg_s, params, bufs, pos0, toks = _setup(stale=True)
+    out_stale, new_bufs = forward(params, cfg_s, toks, bufs, pos0)
+    # fresh halos must now be stored for step 2
+    assert float(jnp.abs(new_bufs[0]["k"][1:]).max()) > 0
+    # shard 0 has no left neighbor: halo stays zero
+    np.testing.assert_array_equal(np.asarray(new_bufs[0]["k"][0]), 0)
+
+
+def test_stale_second_step_consumes_first():
+    cfg, params, bufs, pos0, toks = _setup(stale=True)
+    _, bufs1 = forward(params, cfg, toks, bufs, pos0)
+    out2, _ = forward(params, cfg, toks, bufs1, pos0)
+    # sync output with the same halo should match a manual concat compute:
+    cfg_sync = HaloConfig(**{**cfg.__dict__, "stale": False})
+    out_sync, _ = forward(params, cfg_sync, toks, bufs, pos0)
+    # step-2 stale output uses step-1 halos == sync halos (same params)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out_sync),
+                               atol=2e-5)
+
+
+def test_training_parity():
+    losses = {}
+    for stale in (False, True):
+        cfg = HaloConfig(stale=stale, window=16, vocab=16, d_model=32,
+                         num_heads=2, num_layers=2)
+        params = init_params(jax.random.PRNGKey(1), cfg)
+        bufs = init_halo_buffers(cfg, S, B, SHARDS)
+        opt_init, step = make_sim_train_step(cfg, SHARDS, lr=5e-3)
+        opt_state = opt_init(params)
+        pos0 = jnp.arange(SHARDS) * S
+        rng = np.random.default_rng(1)
+        ls = []
+        for t in range(40):
+            base = rng.integers(0, cfg.vocab, (B, SHARDS * S))
+            toks = jnp.asarray(base.reshape(B, SHARDS, S).transpose(1, 0, 2),
+                               jnp.int32)
+            loss, params, opt_state, bufs = step(params, opt_state, toks,
+                                                 toks, bufs, pos0)
+            ls.append(float(loss))
+        losses[stale] = ls
+    assert losses[True][-1] < losses[True][0]        # learns
+    assert abs(losses[True][-1] - losses[False][-1]) < 0.3   # parity band

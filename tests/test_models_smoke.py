@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests: REDUCED variant (≤2 layers / d_model ≤ 128 /
+≤4 experts), one forward + one Adam train step on CPU; shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models.model import LM
+from repro.optim import adam
+
+RNG = np.random.default_rng(0)
+
+
+def make_batch(cfg, b, s):
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+    if cfg.is_encdec:
+        batch["audio_embed"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.num_audio_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.num_image_tokens:
+        batch["image_embed"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch_id):
+    cfg = get_arch(arch_id).reduced()
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 16)
+
+    logits, aux = jax.jit(lm.forward_logits)(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size])))
+
+    opt = adam(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lm.loss_fn)(params, batch)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return loss, params, opt_state
+
+    loss0, params, opt_state = step(params, opt_state, batch)
+    loss1, params, opt_state = step(params, opt_state, batch)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss1))
+    # same batch twice with Adam must reduce loss at init
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """Exact published shapes from the assignment table."""
+    cfg = get_arch(arch_id)
+    table = {
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "mamba2-780m": (48, 1536, 1, 1, 0, 50280),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    }
+    L, d, h, kv, dff, vocab = table[arch_id]
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == dff and cfg.vocab_size == vocab
+    if arch_id == "deepseek-v2-236b":
+        assert cfg.kv_lora_rank == 512 and cfg.num_experts == 160 \
+            and cfg.experts_per_tok == 6 and cfg.num_shared_experts == 2
+    if arch_id == "granite-moe-1b-a400m":
+        assert cfg.num_experts == 32 and cfg.experts_per_tok == 8
+    if arch_id == "mamba2-780m":
+        assert cfg.ssm_state == 128 and cfg.family == "ssm"
+    if arch_id == "recurrentgemma-2b":
+        assert cfg.pattern == ("rglru", "rglru", "attn")
+    if arch_id == "qwen3-8b":
+        assert cfg.qk_norm
+    if arch_id == "starcoder2-3b":
+        assert cfg.sliding_window == 4096
+    if arch_id == "qwen1.5-32b" or arch_id == "codeqwen1.5-7b":
+        assert cfg.qkv_bias
+
+
+def test_layer_grouping_patterns():
+    """Heterogeneous archs group correctly (scan units / singletons)."""
+    lm = LM(get_arch("recurrentgemma-2b"))
+    kinds = [s.mixer for s, n in lm.groups for _ in range(n)]
+    assert len(kinds) == 26
+    assert kinds[:6] == ["rglru", "rglru", "attn"] * 2
+    lm = LM(get_arch("llama-3.2-vision-11b"))
+    kinds = [s.mixer for s, n in lm.groups for _ in range(n)]
+    assert len(kinds) == 40
+    assert kinds.count("xattn") == 8
+    assert all(k == "xattn" for i, k in enumerate(kinds) if (i + 1) % 5 == 0)
+    lm = LM(get_arch("deepseek-v2-236b"))
+    specs = [(s.mixer, s.ffn, n) for s, n in lm.groups]
+    assert specs == [("mla", "dense", 1), ("mla", "moe", 59)]
+
+
+def test_moe_router_properties():
+    from repro.models.moe import apply_moe, init_moe
+    cfg = get_arch("granite-moe-1b-a400m").reduced()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+    out, aux = apply_moe(p, cfg, x, dropless=True)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3   # Switch aux loss lower bound ≈ 1
+    # capacity dropping path: tiny capacity must not NaN
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, capacity_factor=0.05)
+    out2, _ = apply_moe(p, cfg2, x)
+    assert bool(jnp.all(jnp.isfinite(out2)))
+
+
+def test_padded_vocab_logits_masked():
+    cfg = get_arch("granite-moe-1b-a400m")   # vocab 49155 -> padded 51200
+    assert cfg.padded_vocab == 51200
+    red = cfg.reduced()
+    lm = LM(red)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(red, 1, 8)
+    logits, _ = lm.forward_logits(params, batch)
+    if red.padded_vocab > red.vocab_size:
+        assert float(logits[..., red.vocab_size:].max()) <= -1e29
