@@ -1,36 +1,62 @@
-"""Kernel microbenchmarks: block-sparse SpMM and flash attention (interpret
-mode on CPU — correctness + tile statistics; wall numbers are CPU-only)."""
+"""Kernel microbenchmarks: block-sparse SpMM (forward + transpose) vs the
+COO segment_sum engine on the same partition shard, and flash attention
+(interpret mode on CPU — correctness + tile statistics; wall numbers are
+CPU-only)."""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.kernels.gcn_spmm import TILE, build_tiles, tile_density
+from repro.kernels.gcn_spmm import TILE, build_tile_topology, tile_density
 from repro.kernels import ops
+from repro.kernels.aggregate import get_engine
 from repro.kernels.ref import mha_ref
 
 
 def run(quick: bool = False):
     rng = np.random.default_rng(0)
-    # SpMM on a real partition shard
+    # SpMM engines head-to-head on a real partition shard
     from repro.data import GraphDataPipeline
-    pipeline = GraphDataPipeline.build("tiny", 2, kind="gcn")
-    pg = pipeline.pg
-    row = pg.edge_row[0].astype(np.int64)
-    col = pg.edge_col[0].astype(np.int64)
-    w = pg.edge_w[0]
-    combined = pg.max_inner + pg.num_parts * pg.slot
-    cpad = -(-combined // TILE) * TILE
-    rpad = -(-pg.max_inner // TILE) * TILE
-    h = jnp.asarray(rng.normal(size=(cpad, 128)), jnp.float32)
-    tr, tc, tv = build_tiles((row, col, w), pg.max_inner, combined)
-    t = time_fn(lambda: ops.spmm(jnp.asarray(tr), jnp.asarray(tc),
-                                 jnp.asarray(tv), h, rpad), iters=2)
-    dens = tile_density(tr, pg.max_inner, combined)
-    flops = 2 * len(tr) * TILE * TILE * 128
-    emit("kernels/gcn_spmm/tiny_p0", t * 1e6,
-         f"tiles={len(tr)},tile_density={dens:.3f},gflop={flops / 1e9:.2f}")
+    pipeline = GraphDataPipeline.build("tiny", 2, kind="gcn",
+                                       agg="blocksparse")
+    pg, topo = pipeline.pg, pipeline.topo
+    combined = pg.combined
+    feat = 128
+    comb = jnp.asarray(rng.normal(size=(combined, feat)), jnp.float32)
+    dz = jnp.asarray(rng.normal(size=(pg.max_inner, feat)), jnp.float32)
+
+    slices = {}
+    for name in ("coo", "blocksparse"):
+        eng = get_engine(name)
+        ts = tuple(getattr(topo, f)[0] for f in eng.fields)
+        slices[name] = (eng, ts)
+        t = time_fn(lambda e=eng, s=ts: e.spmm(s, comb, pg.max_inner),
+                    iters=2)
+        emit(f"kernels/gcn_spmm/tiny_p0/{name}/fwd", t * 1e6, "")
+        t = time_fn(lambda e=eng, s=ts: e.spmm_t(s, dz, combined), iters=2)
+        emit(f"kernels/gcn_spmm/tiny_p0/{name}/transpose", t * 1e6, "")
+
+    # parity between the two engines on the same shard
+    z_coo = slices["coo"][0].spmm(slices["coo"][1], comb, pg.max_inner)
+    z_bs = slices["blocksparse"][0].spmm(slices["blocksparse"][1], comb,
+                                         pg.max_inner)
+    d_coo = slices["coo"][0].spmm_t(slices["coo"][1], dz, combined)
+    d_bs = slices["blocksparse"][0].spmm_t(slices["blocksparse"][1], dz,
+                                           combined)
+    err_f = float(jnp.abs(z_coo - z_bs).max())
+    err_t = float(jnp.abs(d_coo - d_bs).max())
+
+    # tile statistics of the extracted topology (built COO-direct: no dense
+    # intermediate)
+    tt = build_tile_topology(pg.edge_row[0], pg.edge_col[0], pg.edge_w[0],
+                             pg.max_inner, combined)
+    dens = tile_density(tt.rows, pg.max_inner, combined)
+    flops = 2 * tt.n_tiles * TILE * TILE * feat
+    emit("kernels/gcn_spmm/tiny_p0/parity", err_f * 1e6,
+         f"fwd_err={err_f:.2e},t_err={err_t:.2e},tiles={tt.n_tiles},"
+         f"tile_density={dens:.3f},gflop={flops / 1e9:.2f}")
+    assert err_f < 2e-4 and err_t < 2e-4
 
     # flash attention vs ref
     B, S, H, d = 1, 512, 4, 64

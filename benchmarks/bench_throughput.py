@@ -1,15 +1,21 @@
 """Paper Fig. 3 + Tab. 4 (throughput columns) — PipeGCN speedup over vanilla
 partition-parallel training.
 
-Two views:
+Three views:
   (a) schedule-analytic speedup on the paper's hardware model (measured
       boundary bytes + FLOPs of the real shards) — expect the paper's
       1.7×–2.2× band where comm ratio is 60–85 %;
   (b) measured epochs/s of the actual jitted JAX step on this CPU (no real
-      interconnect, so (b) validates step cost parity, not overlap).
+      interconnect, so (b) validates step cost parity, not overlap);
+  (c) COO vs block-sparse aggregation engine step time on the SAME
+      partitioned graph (the topology carries both the COO shards and the
+      tile streams, so only ``ModelConfig.agg`` changes). On CPU the Pallas
+      kernels run in interpret mode, so (c) is an engine-dispatch/parity
+      check, not an MXU speedup measurement.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -25,6 +31,47 @@ from repro.optim import adam
 CASES = [("reddit-sim", 2), ("reddit-sim", 4),
          ("products-sim", 5), ("products-sim", 10),
          ("yelp-sim", 3), ("yelp-sim", 6)]
+
+
+def _measure_step(pipeline, mc, variant: str, iters: int) -> float:
+    model = PipeGCN(mc, PipeConfig.named(variant))
+    opt = adam(1e-2)
+    params = model.init_params(jax.random.PRNGKey(0))
+    bufs = model.init_buffers(pipeline.topo)
+    state = opt.init(params)
+    step = make_jitted_train_step(model, opt)
+    key = jax.random.PRNGKey(1)
+    # warmup (buffers are donated: thread them through)
+    loss, params, state, bufs = step(pipeline.topo, params, state,
+                                     bufs, pipeline.train_data, key)
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        loss, params, state, bufs = step(pipeline.topo, params, state,
+                                         bufs, pipeline.train_data, key)
+    jax.block_until_ready(loss)
+    return (time.perf_counter() - t0) / iters
+
+
+def run_engine_comparison(quick: bool = False):
+    """(c): one partitioned graph, two aggregation engines."""
+    name, parts = ("tiny", 2) if quick else ("small", 4)
+    pipeline = GraphDataPipeline.build(name, parts, kind="sage",
+                                       agg="blocksparse")
+    tpl = model_template(name)
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=tpl["hidden"], num_layers=tpl["num_layers"],
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+    out = {}
+    for agg in ("coo", "blocksparse"):
+        t = _measure_step(pipeline, dataclasses.replace(mc, agg=agg),
+                          "pipegcn", iters=2 if quick else 3)
+        out[agg] = t
+        detail = f"epochs_per_s={1.0 / t:.2f}"
+        if agg == "blocksparse":
+            detail += f",blocksparse_over_coo={t / out['coo']:.2f}x"
+        emit(f"fig3/engine_step/{name}/p{parts}/{agg}", t * 1e6, detail)
+    return out
 
 
 def run(quick: bool = False):
@@ -44,29 +91,12 @@ def run(quick: bool = False):
         # measured per-step wall time of both variants (cost parity on CPU)
         wall = {}
         for variant in ("vanilla", "pipegcn"):
-            model = PipeGCN(mc, PipeConfig.named(variant))
-            opt = adam(1e-2)
-            params = model.init_params(jax.random.PRNGKey(0))
-            bufs = model.init_buffers(pipeline.topo)
-            state = opt.init(params)
-            step = make_jitted_train_step(model, opt)
-            key = jax.random.PRNGKey(1)
-            iters = 3 if quick else 5
-            # warmup (buffers are donated: thread them through)
-            loss, params, state, bufs = step(pipeline.topo, params, state,
-                                             bufs, pipeline.train_data, key)
-            jax.block_until_ready(loss)
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                loss, params, state, bufs = step(pipeline.topo, params,
-                                                 state, bufs,
-                                                 pipeline.train_data, key)
-            jax.block_until_ready(loss)
-            t = (time.perf_counter() - t0) / iters
+            t = _measure_step(pipeline, mc, variant, iters=3 if quick else 5)
             wall[variant] = t
             emit(f"fig3/measured_step/{name}/p{parts}/{variant}", t * 1e6,
                  f"epochs_per_s={1.0 / t:.2f}")
         out.append((name, parts, m.speedup, wall))
+    run_engine_comparison(quick=quick)
     return out
 
 

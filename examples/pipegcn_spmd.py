@@ -35,8 +35,8 @@ def main():
     model = PipeGCN(mc, PipeConfig.named("pipegcn-gf", gamma=0.5))
     topo = pipeline.topo
 
-    mesh = jax.make_mesh((PARTS,), ("parts",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((PARTS,), ("parts",))
     spmd_step = model.make_spmd_step(mesh, topo, "parts")
 
     opt = adam(0.01)

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Fast tier-1 subset: everything except the slow (subprocess / convergence)
+# tests. Full suite: PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"

@@ -15,6 +15,9 @@ class ModelConfig:
     num_classes: int = 16
     dropout: float = 0.5
     multilabel: bool = False       # sigmoid BCE (Yelp) vs softmax CE
+    # Aggregation engine for the Eq. 3/4 SpMM: "coo" (segment_sum fallback)
+    # or "blocksparse" (Pallas MXU kernels; Topology must carry tiles).
+    agg: str = "coo"
 
     def layer_dims(self) -> list[tuple[int, int]]:
         """[(fan_in_of_aggregated, fan_out)] per layer (pre-concat dims)."""

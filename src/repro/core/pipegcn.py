@@ -16,6 +16,14 @@ Design notes
   The layer math is shared; only the 4 sync points differ (feature exchange,
   gradient exchange, weight-grad reduce, loss reduce).
 
+* The aggregation SpMM (Eq. 3 forward, Eq. 4 transpose) is pluggable:
+  ``ModelConfig.agg`` selects between the padded-COO ``segment_sum`` engine
+  ("coo", the verified fallback) and the MXU-shaped Pallas block-sparse
+  engine ("blocksparse", see repro.kernels.gcn_spmm / aggregate). The
+  blocksparse engine needs tile streams on the Topology —
+  ``topology_from(pg, with_tiles=True)`` attaches them. Both engines run
+  under both backends; the layer math never sees the storage format.
+
 * Pipeline state (the "stale buffers") is explicit and threaded through the
   step function — this is what makes the deferred collectives free of data
   dependence on current-iteration compute (the XLA scheduler can overlap
@@ -40,11 +48,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import ModelConfig, PipeConfig
-from repro.graph.halo import PartitionedGraph
+from repro.graph.halo import PartitionedGraph, extract_partition_tiles
+from repro.kernels.aggregate import get_engine
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map: `jax.shard_map` (with check_vma) on new
+    JAX, `jax.experimental.shard_map.shard_map` (with check_rep) on 0.4.x."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 class Topology(NamedTuple):
-    """Device-ready padded partition topology (leading axis = partition)."""
+    """Device-ready padded partition topology (leading axis = partition).
+
+    The COO fields are always present; the `tile_*` fields (block-sparse
+    streams for the Pallas engine, see repro.kernels.gcn_spmm) are attached
+    by ``topology_from(pg, with_tiles=True)`` and stay None otherwise —
+    None fields are empty pytree subtrees, so every jit/shard_map/tree_map
+    over a Topology works unchanged with or without tiles.
+    """
 
     edge_row: jax.Array    # (P, max_nnz) int32
     edge_col: jax.Array    # (P, max_nnz) int32 (combined-array columns)
@@ -52,6 +79,12 @@ class Topology(NamedTuple):
     send_idx: jax.Array    # (P, P, slot) int32
     send_mask: jax.Array   # (P, P, slot) bool
     inner_mask: jax.Array  # (P, max_inner) bool
+    tile_rows: jax.Array | None = None    # (P, n_tiles) int32
+    tile_cols: jax.Array | None = None    # (P, n_tiles) int32
+    tile_vals: jax.Array | None = None    # (P, n_tiles, T, T) f32
+    tile_t_out: jax.Array | None = None   # (P, n_tiles) int32
+    tile_t_in: jax.Array | None = None    # (P, n_tiles) int32
+    tile_t_perm: jax.Array | None = None  # (P, n_tiles) int32
 
     @property
     def num_parts(self) -> int:
@@ -80,12 +113,23 @@ class ShardedData(NamedTuple):
     eval_mask: jax.Array   # (P, max_inner) bool (val or test)
 
 
-def topology_from(pg: PartitionedGraph) -> Topology:
+def topology_from(pg: PartitionedGraph, with_tiles: bool = False) -> Topology:
+    """Lift a PartitionedGraph to device arrays; `with_tiles=True` also
+    extracts the block-sparse tile streams the "blocksparse" engine needs."""
+    tiles = {}
+    if with_tiles:
+        pt = extract_partition_tiles(pg)
+        tiles = dict(tile_rows=jnp.asarray(pt.rows),
+                     tile_cols=jnp.asarray(pt.cols),
+                     tile_vals=jnp.asarray(pt.vals),
+                     tile_t_out=jnp.asarray(pt.t_out),
+                     tile_t_in=jnp.asarray(pt.t_in),
+                     tile_t_perm=jnp.asarray(pt.t_perm))
     return Topology(
         edge_row=jnp.asarray(pg.edge_row), edge_col=jnp.asarray(pg.edge_col),
         edge_w=jnp.asarray(pg.edge_w), send_idx=jnp.asarray(pg.send_idx),
         send_mask=jnp.asarray(pg.send_mask),
-        inner_mask=jnp.asarray(pg.inner_mask))
+        inner_mask=jnp.asarray(pg.inner_mask), **tiles)
 
 
 def shard_data(pg: PartitionedGraph, x, labels, train_mask, eval_mask) -> ShardedData:
@@ -98,19 +142,9 @@ def shard_data(pg: PartitionedGraph, x, labels, train_mask, eval_mask) -> Sharde
 
 # ----------------------------------------------------------------------
 # Per-partition primitives (no partition axis; sim backend vmaps them).
+# The SpMM itself (z = P·comb and δcomb = Pᵀ·δz) lives behind the
+# aggregation-engine interface in repro.kernels.aggregate.
 # ----------------------------------------------------------------------
-
-def _spmm(edge_row, edge_col, edge_w, comb, max_inner):
-    """z = P_local · comb  where comb = [H_inner ; B_halo]."""
-    vals = comb[edge_col] * edge_w[:, None]
-    return jax.ops.segment_sum(vals, edge_row, num_segments=max_inner)
-
-
-def _spmm_t(edge_row, edge_col, edge_w, dz, combined):
-    """Transpose: δcomb = P_localᵀ · δz."""
-    vals = dz[edge_row] * edge_w[:, None]
-    return jax.ops.segment_sum(vals, edge_col, num_segments=combined)
-
 
 def _gather_send(h, send_idx, send_mask):
     """(max_inner,F) -> (P, slot, F) payload for each peer."""
@@ -256,14 +290,31 @@ class PipeGCN:
 
     # ---------------- shared layer math ----------------
 
-    def _layer_forward(self, topo_slice, w, b, h_prev, halo, drop_mask):
+    @property
+    def engine(self):
+        """The aggregation engine selected by ``ModelConfig.agg``."""
+        return get_engine(self.model.agg)
+
+    def _agg_slice(self, topo: Topology):
+        """The Topology fields the selected engine consumes (still carrying
+        the leading partition axis; sliced/vmapped by the backend)."""
+        engine = self.engine
+        tslice = tuple(getattr(topo, f) for f in engine.fields)
+        if any(t is None for t in tslice):
+            raise ValueError(
+                f"aggregation engine {engine.name!r} needs Topology fields "
+                f"{engine.fields}, but some are None — build the topology "
+                "with topology_from(pg, with_tiles=True) or "
+                "GraphDataPipeline.build(..., agg='blocksparse')")
+        return tslice
+
+    def _layer_forward(self, tslice, w, b, h_prev, halo, drop_mask):
         """One GCN/SAGE layer on one partition. Returns (h, residuals)."""
-        edge_row, edge_col, edge_w = topo_slice
         max_inner = h_prev.shape[0]
         comb = jnp.concatenate([h_prev, halo], axis=0)
         if drop_mask is not None:
             comb = comb * drop_mask
-        z = _spmm(edge_row, edge_col, edge_w, comb, max_inner)
+        z = self.engine.spmm(tslice, comb, max_inner)
         if self.model.kind == "sage":
             a = jnp.concatenate([z, comb[:max_inner]], axis=-1)
         else:
@@ -271,9 +322,8 @@ class PipeGCN:
         u = a @ w + b
         return u, (comb, a)
 
-    def _layer_backward(self, topo_slice, w, du, comb, drop_mask, max_inner):
-        """Manual VJP of one layer. Returns (dW, db, dH_inner_local, dB_halo)."""
-        edge_row, edge_col, edge_w = topo_slice
+    def _layer_backward(self, tslice, w, du, comb, drop_mask, max_inner):
+        """Manual VJP of one layer. Returns (dH_inner_local, dB_halo)."""
         combined = comb.shape[0]
         fin = comb.shape[-1]
         da = du @ w.T
@@ -281,7 +331,7 @@ class PipeGCN:
             dz, dself = da[..., :fin], da[..., fin:]
         else:
             dz, dself = da, None
-        dcomb = _spmm_t(edge_row, edge_col, edge_w, dz, combined)
+        dcomb = self.engine.spmm_t(tslice, dz, combined)
         if dself is not None:
             dcomb = dcomb.at[:max_inner].add(dself)
         if drop_mask is not None:
@@ -301,7 +351,7 @@ class PipeGCN:
         P = topo.num_parts
         max_inner = topo.max_inner
 
-        tslice = (topo.edge_row, topo.edge_col, topo.edge_w)
+        tslice = self._agg_slice(topo)
         send_idx, send_mask = topo.send_idx, topo.send_mask
         if backend.is_spmd:
             gather = _gather_send
@@ -353,11 +403,11 @@ class PipeGCN:
                     tslice, params[f"w{ell}"], params[f"b{ell}"], h, halo, dm)
             else:
                 fwd = jax.vmap(
-                    lambda er, ec, ew, h_, halo_, dm_, w_=params[f"w{ell}"],
+                    lambda ts, h_, halo_, dm_, w_=params[f"w{ell}"],
                            b_=params[f"b{ell}"]:
-                    self._layer_forward((er, ec, ew), w_, b_, h_, halo_, dm_),
-                    in_axes=(0, 0, 0, 0, 0, 0 if dm is not None else None))
-                u, (comb, a) = fwd(*tslice, h, halo, dm)
+                    self._layer_forward(ts, w_, b_, h_, halo_, dm_),
+                    in_axes=(0, 0, 0, 0 if dm is not None else None))
+                u, (comb, a) = fwd(tslice, h, halo, dm)
             residuals.append((comb, a, u, dm))
             h = jax.nn.relu(u) if ell < L - 1 else u
 
@@ -398,11 +448,10 @@ class PipeGCN:
                     tslice, params[f"w{ell}"], du, comb, dm, max_inner)
             else:
                 bwd = jax.vmap(
-                    lambda er, ec, ew, du_, comb_, dm_, w_=params[f"w{ell}"]:
-                    self._layer_backward((er, ec, ew), w_, du_, comb_, dm_,
-                                         max_inner),
-                    in_axes=(0, 0, 0, 0, 0, 0 if dm is not None else None))
-                dh_local, db = bwd(*tslice, du, comb, dm)
+                    lambda ts, du_, comb_, dm_, w_=params[f"w{ell}"]:
+                    self._layer_backward(ts, w_, du_, comb_, dm_, max_inner),
+                    in_axes=(0, 0, 0, 0 if dm is not None else None))
+                dh_local, db = bwd(tslice, du, comb, dm)
             db = db.reshape(db.shape[:-2] + (P, topo.slot, dims[ell][0]))
             # -- boundary gradient communication ---------------------------
             if pipe.compress_boundary:
@@ -498,7 +547,7 @@ class PipeGCN:
 
         def step(topo_g, params, buffers, data, key):
             bspec = PS(None, axis_name) if kq > 1 else pspec
-            f = jax.shard_map(
+            f = _shard_map(
                 per_device, mesh=mesh,
                 in_specs=(jax.tree.map(lambda _: pspec, tuple(topo_g)),
                           jax.tree.map(lambda _: PS(), params),
@@ -507,8 +556,7 @@ class PipeGCN:
                           PS()),
                 out_specs=(PS(), pspec,
                            jax.tree.map(lambda _: PS(), params) if train else PS(),
-                           jax.tree.map(lambda _: bspec, buffers) if train else PS()),
-                check_vma=False)
+                           jax.tree.map(lambda _: bspec, buffers) if train else PS()))
             return f(tuple(topo_g), params, buffers, tuple(data), key)
 
         return jax.jit(step)

@@ -48,6 +48,9 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
                   log: Callable[[str], None] | None = None) -> TrainResult:
     model = PipeGCN(model_cfg, pipe_cfg)
     topo = pipeline.topo
+    # Fail fast (before tracing) if the selected aggregation engine needs
+    # Topology fields the pipeline was not built with.
+    model._agg_slice(topo)
     params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)

@@ -1,5 +1,10 @@
 """End-to-end graph data pipeline: dataset -> normalization -> partition ->
-padded shards -> device arrays. One call site for every example/benchmark."""
+padded shards -> device arrays. One call site for every example/benchmark.
+
+The `agg` knob mirrors ``ModelConfig.agg``: building with
+``agg="blocksparse"`` additionally extracts the per-partition block-sparse
+tile streams onto the Topology, so either aggregation engine can run on the
+same partitioned graph (the COO shards are always present)."""
 from __future__ import annotations
 
 import dataclasses
@@ -21,24 +26,25 @@ class GraphDataPipeline:
     train_data: ShardedData
     val_data: ShardedData
     test_data: ShardedData
+    agg: str = "coo"
 
     @staticmethod
     def build(name_or_ds, num_parts: int, kind: str = "sage",
-              seed: int = 0, partition_method: str = "bfs+refine"
-              ) -> "GraphDataPipeline":
+              seed: int = 0, partition_method: str = "bfs+refine",
+              agg: str = "coo") -> "GraphDataPipeline":
         ds = (make_dataset(name_or_ds) if isinstance(name_or_ds, str)
               else name_or_ds)
         prop = mean_normalized(ds.graph) if kind == "sage" else sym_normalized(ds.graph)
         part = partition_graph(ds.graph, num_parts, seed=seed,
                                method=partition_method)
         pg = build_partitioned_graph(prop, part, num_parts)
-        topo = topology_from(pg)
+        topo = topology_from(pg, with_tiles=(agg == "blocksparse"))
         mk = lambda m: shard_data(pg, ds.features, ds.labels, ds.train_mask, m)
         return GraphDataPipeline(
             dataset=ds, pg=pg, topo=topo,
             train_data=mk(ds.val_mask),
             val_data=mk(ds.val_mask),
-            test_data=mk(ds.test_mask))
+            test_data=mk(ds.test_mask), agg=agg)
 
     def metric(self, logits_packed) -> dict:
         """Global accuracy (single-label) or F1-micro (multilabel) on

@@ -2,11 +2,14 @@
 from repro.graph.csr import CSRGraph, coo_to_csr, sym_normalized, mean_normalized
 from repro.graph.synthetic import sbm_graph, rmat_graph, make_dataset, DATASETS, GraphDataset
 from repro.graph.partition import partition_graph, edge_cut
-from repro.graph.halo import PartitionedGraph, build_partitioned_graph
+from repro.graph.halo import (PartitionedGraph, PartitionTiles,
+                              build_partitioned_graph,
+                              extract_partition_tiles)
 
 __all__ = [
     "CSRGraph", "coo_to_csr", "sym_normalized", "mean_normalized",
     "sbm_graph", "rmat_graph", "make_dataset", "DATASETS", "GraphDataset",
     "partition_graph", "edge_cut",
-    "PartitionedGraph", "build_partitioned_graph",
+    "PartitionedGraph", "PartitionTiles", "build_partitioned_graph",
+    "extract_partition_tiles",
 ]

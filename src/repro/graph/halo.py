@@ -84,6 +84,55 @@ class PartitionedGraph:
         return float(1.0 - real / max(padded, 1))
 
 
+@dataclasses.dataclass
+class PartitionTiles:
+    """Stacked block-sparse tile streams, one row per partition.
+
+    Built by `extract_partition_tiles` from the padded COO shards without
+    ever materializing a dense matrix. All partitions are padded to the same
+    tile count with zero tiles so the arrays stack into a leading partition
+    axis (SPMD-ready, mirroring the COO shard layout). `t_*` arrays drive
+    the transpose kernel (δcomb = Pᵀ·δz) over the same `vals` storage.
+    """
+
+    rows: np.ndarray      # (P, n_tiles) int32 row block, sorted per part
+    cols: np.ndarray      # (P, n_tiles) int32 col block
+    vals: np.ndarray      # (P, n_tiles, T, T) float32
+    t_out: np.ndarray     # (P, n_tiles) int32 Pᵀ output block, sorted
+    t_in: np.ndarray      # (P, n_tiles) int32 Pᵀ input block
+    t_perm: np.ndarray    # (P, n_tiles) int32 per-partition index into vals
+
+    @property
+    def n_tiles(self) -> int:
+        return self.rows.shape[1]
+
+
+def extract_partition_tiles(pg: "PartitionedGraph",
+                            tile: int | None = None) -> PartitionTiles:
+    """Per-partition TILE×TILE tile extraction for the blocksparse engine.
+
+    Each partition's padded COO shard (rows over inner nodes, columns over
+    the combined [inner; halo] array) is bucketed into dense MXU-shaped
+    tiles directly — O(nnz + n_tiles·T²), no dense (max_inner, combined)
+    intermediate. Padded edges (weight 0) are dropped by the bucketing.
+    """
+    from repro.kernels.gcn_spmm import (TILE, build_tile_topology,
+                                        pad_tile_topology)
+    tile = TILE if tile is None else tile
+    per = [build_tile_topology(pg.edge_row[i], pg.edge_col[i], pg.edge_w[i],
+                               pg.max_inner, pg.combined, tile)
+           for i in range(pg.num_parts)]
+    n_tiles = max(tt.n_tiles for tt in per)
+    per = [pad_tile_topology(tt, n_tiles) for tt in per]
+    return PartitionTiles(
+        rows=np.stack([tt.rows for tt in per]),
+        cols=np.stack([tt.cols for tt in per]),
+        vals=np.stack([tt.vals for tt in per]),
+        t_out=np.stack([tt.t_out for tt in per]),
+        t_in=np.stack([tt.t_in for tt in per]),
+        t_perm=np.stack([tt.t_perm for tt in per]))
+
+
 def build_partitioned_graph(prop: CSRGraph, part: np.ndarray,
                             num_parts: int | None = None,
                             pad_multiple: int = 8) -> PartitionedGraph:

@@ -1,5 +1,11 @@
 """Pallas TPU kernels for the compute hot spots:
-  gcn_spmm         block-sparse neighbor aggregation (the paper's SpMM)
+  gcn_spmm         block-sparse neighbor aggregation, forward + transpose
+                   (the paper's SpMM, Eq. 3/4), plus COO→tile extraction
   flash_attention  blockwise online-softmax GQA attention (prefill path)
-Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
+  aggregate        pluggable aggregation engines ("coo" | "blocksparse")
+                   behind one spmm/spmm_t interface for the train path
+Each kernel has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
 """
+from repro.kernels.aggregate import ENGINES, get_engine
+
+__all__ = ["ENGINES", "get_engine"]

@@ -1,0 +1,100 @@
+"""Pluggable aggregation engines for the PipeGCN hot path (Eq. 3/4 SpMM).
+
+The training loop calls aggregation through a narrow two-method interface:
+
+    z     = engine.spmm(tslice, comb, num_rows)     # z = P_local · comb
+    dcomb = engine.spmm_t(tslice, dz, num_cols)     # δcomb = P_localᵀ · δz
+
+`tslice` is the tuple of per-partition Topology fields named by
+``engine.fields`` — the model layer stays agnostic to the storage format.
+Two implementations:
+
+  coo         padded COO + `jax.ops.segment_sum` (the verified fallback;
+              exact in float64, works for any shape).
+  blocksparse MXU-shaped Pallas kernels over TILE×TILE tiles
+              (`repro.kernels.gcn_spmm`). Inputs are zero-padded to tile /
+              feature-block multiples on the fly and the result is sliced
+              back, so callers never see the padded shapes. Compute is f32.
+
+Select with ``ModelConfig.agg`` ("coo" | "blocksparse"); blocksparse needs
+tile fields on the Topology (``topology_from(pg, with_tiles=True)`` or
+``GraphDataPipeline.build(..., agg="blocksparse")``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.gcn_spmm import FEAT_BLOCK, TILE
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+class CooEngine:
+    """Padded-COO aggregation via segment_sum (scatter-add)."""
+
+    name = "coo"
+    fields = ("edge_row", "edge_col", "edge_w")
+
+    def spmm(self, tslice, comb, num_rows: int):
+        edge_row, edge_col, edge_w = tslice
+        vals = comb[edge_col] * edge_w[:, None]
+        return jax.ops.segment_sum(vals, edge_row, num_segments=num_rows)
+
+    def spmm_t(self, tslice, dz, num_cols: int):
+        edge_row, edge_col, edge_w = tslice
+        vals = dz[edge_row] * edge_w[:, None]
+        return jax.ops.segment_sum(vals, edge_col, num_segments=num_cols)
+
+
+class BlockSparseEngine:
+    """Block-sparse aggregation on the Pallas SpMM kernels.
+
+    Pads rows to TILE and features to FEAT_BLOCK multiples per call (the
+    tile grid is fixed offline by `build_tile_topology`, so row padding is
+    only about matching the kernel's static output shape), computes in
+    float32, and slices/casts back to the caller's shape and dtype.
+    """
+
+    name = "blocksparse"
+    fields = ("tile_rows", "tile_cols", "tile_vals",
+              "tile_t_out", "tile_t_in", "tile_t_perm")
+
+    def spmm(self, tslice, comb, num_rows: int):
+        tile_rows, tile_cols, tile_vals = tslice[:3]
+        combined, f = comb.shape
+        rpad = _ceil_to(num_rows, TILE)
+        cpad = _ceil_to(combined, TILE)
+        fpad = _ceil_to(f, FEAT_BLOCK)
+        combp = jnp.pad(comb.astype(jnp.float32),
+                        ((0, cpad - combined), (0, fpad - f)))
+        z = ops.spmm(tile_rows, tile_cols, tile_vals, combp, rpad)
+        return z[:num_rows, :f].astype(comb.dtype)
+
+    def spmm_t(self, tslice, dz, num_cols: int):
+        tile_vals = tslice[2]
+        t_out, t_in, t_perm = tslice[3:]
+        num_rows, f = dz.shape
+        rpad = _ceil_to(num_rows, TILE)
+        cpad = _ceil_to(num_cols, TILE)
+        fpad = _ceil_to(f, FEAT_BLOCK)
+        dzp = jnp.pad(dz.astype(jnp.float32),
+                      ((0, rpad - num_rows), (0, fpad - f)))
+        d = ops.spmm_t(t_out, t_in, t_perm, tile_vals, dzp, cpad)
+        return d[:num_cols, :f].astype(dz.dtype)
+
+
+ENGINES = {e.name: e for e in (CooEngine(), BlockSparseEngine())}
+
+
+def get_engine(name: str):
+    """Look up an aggregation engine by name ("coo" | "blocksparse")."""
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown aggregation engine {name!r}; have {sorted(ENGINES)}"
+        ) from None

@@ -1,5 +1,6 @@
-"""Block-sparse SpMM Pallas TPU kernel — the GCN neighbor-aggregation
-hot spot (z = P·H), adapted from the paper's CUDA/DGL CSR SpMM to TPU.
+"""Block-sparse SpMM Pallas TPU kernels — the GCN neighbor-aggregation
+hot spot, forward (z = P·H, Eq. 3) and transpose (δcomb = Pᵀ·δz, Eq. 4 /
+Alg. 1 lines 17–30), plus the offline tile extraction that feeds them.
 
 TPU adaptation (DESIGN.md §2.4): CSR gather/scatter is VPU-hostile; instead
 the propagation matrix is tiled into TILE×TILE *dense* blocks (MXU-shaped),
@@ -8,15 +9,30 @@ against the matching feature row-block on the MXU:
 
     out[r·T:(r+1)·T, :] += tile_vals[t] @ h[c·T:(c+1)·T, :]
 
-Tiles are sorted by row-block; the (row-major) grid revisits the same output
-block for consecutive tiles of one row, accumulating in VMEM, and flushes
-when the row-block changes — the canonical TPU block-sparse reduction
-pattern. Tile coordinates arrive via scalar prefetch (PrefetchScalarGridSpec)
-so the index stream is resident before the DMA of each tile.
+Tiles are sorted by output block; the (row-major) grid revisits the same
+output block for consecutive tiles of one run, accumulating in VMEM, and
+flushes when the output block changes — the canonical TPU block-sparse
+reduction pattern. Tile coordinates arrive via scalar prefetch
+(PrefetchScalarGridSpec) so the index stream is resident before the DMA of
+each tile.
+
+The transpose kernel (`spmm_block_sparse_t`) reuses the SAME tile values:
+it walks the tiles in a column-major order (a prefetched permutation into
+`tile_vals`) and contracts each tile transposed (dot_general over dim 0),
+accumulating into the *column* block — so the manual backward runs
+block-sparse without storing a second copy of P.
+
+Tile extraction (`build_tile_topology`) works directly on COO triples and
+never materializes a dense (N, N) matrix: tiles are bucketed with one
+`np.unique` over block keys and one scatter-add into the (n_tiles, T, T)
+value array — O(nnz + n_tiles·T²) memory, the block-sparse footprint.
+
+Both engines behind one interface live in `repro.kernels.aggregate`; the
+training path selects them via ``ModelConfig.agg``.
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +43,10 @@ from jax.experimental.pallas import tpu as pltpu
 TILE = 128          # MXU-shaped adjacency tile
 FEAT_BLOCK = 128    # feature columns per grid step
 
+
+# ----------------------------------------------------------------------
+# Forward kernel: z = P · h
+# ----------------------------------------------------------------------
 
 def _kernel(rows_ref, cols_ref, vals_ref, h_ref, out_ref, acc_ref):
     """Grid: (num_feature_blocks, num_tiles) — tiles innermost so the output
@@ -61,7 +81,7 @@ def spmm_block_sparse(tile_rows, tile_cols, tile_vals, h, num_rows: int,
     h: (C, F) with C = num_col_blocks·T, F % FEAT_BLOCK == 0.
     num_rows: output rows (multiple of T). Rows with no tiles stay zero only
     if every row-block has ≥1 tile — callers pad with an explicit zero tile
-    per empty row-block (build_tiles does this).
+    per empty row-block (build_tile_topology does this).
     """
     n_tiles = tile_rows.shape[0]
     f = h.shape[1]
@@ -88,37 +108,189 @@ def spmm_block_sparse(tile_rows, tile_cols, tile_vals, h, num_rows: int,
     )(tile_rows, tile_cols, tile_vals, h)
 
 
+# ----------------------------------------------------------------------
+# Transpose kernel: δcomb = Pᵀ · δz  (same tiles, column-major walk)
+# ----------------------------------------------------------------------
+
+def _kernel_t(out_ref_s, in_ref_s, perm_ref, vals_ref, dz_ref, out_ref,
+              acc_ref):
+    """Grid: (num_feature_blocks, num_tiles). The tile stream is sorted by
+    Pᵀ's output block (= P's column block); `perm` points each stream slot
+    at its tile in the forward `tile_vals`, so no transposed copy of P is
+    ever stored. The contraction  valsᵀ @ dz  is a dot_general over dim 0
+    of both operands (MXU-friendly, no in-kernel transpose)."""
+    t = pl.program_id(1)
+
+    first_of_run = jnp.logical_or(
+        t == 0, out_ref_s[t] != out_ref_s[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first_of_run)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        vals_ref[...], dz_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    last = t == pl.num_programs(1) - 1
+    last_of_run = jnp.logical_or(
+        last, out_ref_s[t] != out_ref_s[jnp.minimum(t + 1,
+                                                    pl.num_programs(1) - 1)])
+
+    @pl.when(last_of_run)
+    def _():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
+                        interpret: bool = True):
+    """δcomb = Pᵀ_blocksparse · δz, reusing the forward tile values.
+
+    t_out:  (n_tiles,) int32 output (column) block per stream slot, sorted
+            ascending — every column block must appear ≥ once (zero fillers).
+    t_in:   (n_tiles,) int32 input (row) block of δz consumed per slot.
+    t_perm: (n_tiles,) int32 index into tile_vals for each slot.
+    tile_vals: (n_tiles, T, T) forward tile values (NOT transposed).
+    dz: (R, F) with R = num_row_blocks·T, F % FEAT_BLOCK == 0.
+    num_cols: output rows of the transpose product (multiple of T).
+    """
+    n_tiles = t_out.shape[0]
+    f = dz.shape[1]
+    assert f % FEAT_BLOCK == 0 and num_cols % TILE == 0
+    grid = (f // FEAT_BLOCK, n_tiles)
+
+    return pl.pallas_call(
+        _kernel_t,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,      # t_out, t_in, t_perm
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, TILE, TILE),
+                             lambda fb, t, to, ti, tp: (tp[t], 0, 0)),
+                pl.BlockSpec((TILE, FEAT_BLOCK),
+                             lambda fb, t, to, ti, tp: (ti[t], fb)),
+            ],
+            out_specs=pl.BlockSpec((TILE, FEAT_BLOCK),
+                                   lambda fb, t, to, ti, tp: (to[t], fb)),
+            scratch_shapes=[pltpu.VMEM((TILE, FEAT_BLOCK), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_cols, f), dz.dtype),
+        interpret=interpret,
+    )(t_out, t_in, t_perm, tile_vals, dz)
+
+
+# ----------------------------------------------------------------------
+# Tile extraction (numpy, offline preprocessing — never densifies)
+# ----------------------------------------------------------------------
+
+class TileTopology(NamedTuple):
+    """Block-sparse topology of one propagation shard, for P and Pᵀ.
+
+    The forward stream (rows/cols/vals) is sorted by (row_block, col_block);
+    the transpose stream (t_out/t_in/t_perm) walks the SAME vals array in
+    (col_block, row_block) order via `t_perm`. Both streams carry ≥1 tile
+    per output block (zero fillers) so every output block gets flushed.
+    """
+
+    rows: np.ndarray        # (n_tiles,) int32 row block, sorted
+    cols: np.ndarray        # (n_tiles,) int32 col block
+    vals: np.ndarray        # (n_tiles, T, T) float32
+    t_out: np.ndarray       # (n_tiles,) int32 Pᵀ output block, sorted
+    t_in: np.ndarray        # (n_tiles,) int32 Pᵀ input (δz) block
+    t_perm: np.ndarray      # (n_tiles,) int32 index into vals
+    num_row_blocks: int
+    num_col_blocks: int
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.rows)
+
+
+def build_tile_topology(row, col, val, num_rows: int, num_cols: int,
+                        tile: int = TILE) -> TileTopology:
+    """Bucket a COO triple into TILE×TILE tiles without densifying.
+
+    Memory is O(nnz + n_tiles·T²) — the block-sparse footprint itself —
+    never O(num_rows·num_cols). Explicit zeros (padded edges) are dropped.
+    Zero filler tiles are appended for row blocks with no tiles (so the
+    forward kernel flushes them) and for column blocks with no tiles (so
+    the transpose kernel flushes those).
+    """
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    val = np.asarray(val, np.float32)
+    keep = val != 0
+    row, col, val = row[keep], col[keep], val[keep]
+
+    nrb = -(-num_rows // tile)
+    ncb = -(-num_cols // tile)
+    key = (row // tile) * ncb + (col // tile)
+    uk, inv = np.unique(key, return_inverse=True)
+    vals = np.zeros((len(uk), tile, tile), np.float32)
+    np.add.at(vals, (inv, row % tile, col % tile), val)
+    rows = (uk // ncb).astype(np.int32)
+    cols = (uk % ncb).astype(np.int32)
+
+    # Zero fillers: one per empty row block (forward flush) and per empty
+    # column block (transpose flush).
+    fill_r = np.setdiff1d(np.arange(nrb, dtype=np.int32), rows)
+    fill_c = np.setdiff1d(np.arange(ncb, dtype=np.int32), cols)
+    if len(fill_r) or len(fill_c):
+        rows = np.concatenate([rows, fill_r,
+                               np.zeros(len(fill_c), np.int32)])
+        cols = np.concatenate([cols, np.zeros(len(fill_r), np.int32),
+                               fill_c])
+        vals = np.concatenate(
+            [vals, np.zeros((len(fill_r) + len(fill_c), tile, tile),
+                            np.float32)])
+
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    t_perm = np.lexsort((rows, cols)).astype(np.int32)
+    return TileTopology(rows=rows, cols=cols, vals=vals,
+                        t_out=cols[t_perm], t_in=rows[t_perm], t_perm=t_perm,
+                        num_row_blocks=nrb, num_col_blocks=ncb)
+
+
+def pad_tile_topology(tt: TileTopology, n_tiles: int) -> TileTopology:
+    """Pad the tile streams to `n_tiles` with zero tiles (uniform shapes
+    across partitions for SPMD stacking). Padding appends zero tiles at the
+    tail of both streams pointing at the last output block of each, which
+    preserves sortedness and adds exact zeros."""
+    k = n_tiles - tt.n_tiles
+    if k < 0:
+        raise ValueError(f"cannot shrink tile topology {tt.n_tiles}->{n_tiles}")
+    if k == 0:
+        return tt
+    tile = tt.vals.shape[-1]
+    pad_i = np.arange(tt.n_tiles, tt.n_tiles + k, dtype=np.int32)
+    return TileTopology(
+        rows=np.concatenate([tt.rows, np.full(k, tt.rows[-1], np.int32)]),
+        cols=np.concatenate([tt.cols, np.zeros(k, np.int32)]),
+        vals=np.concatenate([tt.vals, np.zeros((k, tile, tile), np.float32)]),
+        t_out=np.concatenate([tt.t_out, np.full(k, tt.t_out[-1], np.int32)]),
+        t_in=np.concatenate([tt.t_in, np.zeros(k, np.int32)]),
+        t_perm=np.concatenate([tt.t_perm, pad_i]),
+        num_row_blocks=tt.num_row_blocks, num_col_blocks=tt.num_col_blocks)
+
+
 def build_tiles(dense_or_coo, num_rows: int, num_cols: int,
                 tile: int = TILE):
-    """Extract nonzero TILE×TILE tiles (numpy, offline preprocessing).
+    """Legacy forward-only extraction: (tile_rows, tile_cols, tile_vals).
 
-    Accepts a dense (R, C) matrix or a (row, col, val) COO triple.
-    Guarantees ≥1 tile per row-block (zero filler) and returns tiles sorted
-    by (row_block, col_block).
+    Accepts a dense (R, C) matrix or a (row, col, val) COO triple. The COO
+    path never densifies (see build_tile_topology); the dense path simply
+    converts the caller's existing matrix to COO first.
     """
-    rpad = -(-num_rows // tile) * tile
-    cpad = -(-num_cols // tile) * tile
     if isinstance(dense_or_coo, tuple):
         row, col, val = dense_or_coo
-        dense = np.zeros((rpad, cpad), np.float32)
-        np.add.at(dense, (row, col), val)
     else:
-        dense = np.zeros((rpad, cpad), np.float32)
-        dense[:num_rows, :num_cols] = dense_or_coo
-    nrb, ncb = rpad // tile, cpad // tile
-    blocks = dense.reshape(nrb, tile, ncb, tile).transpose(0, 2, 1, 3)
-    nz = np.abs(blocks).sum(axis=(2, 3)) > 0
-    rows, cols, vals = [], [], []
-    for rb in range(nrb):
-        cbs = np.flatnonzero(nz[rb])
-        if len(cbs) == 0:
-            cbs = np.array([0])         # zero filler keeps the run present
-        for cb in cbs:
-            rows.append(rb)
-            cols.append(cb)
-            vals.append(blocks[rb, cb])
-    return (np.asarray(rows, np.int32), np.asarray(cols, np.int32),
-            np.stack(vals).astype(np.float32))
+        dense = np.asarray(dense_or_coo)
+        row, col = np.nonzero(dense)
+        val = dense[row, col]
+    tt = build_tile_topology(row, col, val, num_rows, num_cols, tile)
+    return tt.rows, tt.cols, tt.vals
 
 
 def tile_density(tile_rows, num_rows: int, num_cols: int,

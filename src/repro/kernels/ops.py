@@ -29,6 +29,15 @@ def spmm(tile_rows, tile_cols, tile_vals, h, num_rows: int,
                                    interpret=_auto_interpret(interpret))
 
 
+@partial(jax.jit, static_argnames=("num_cols", "interpret"))
+def spmm_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
+           interpret: bool | None = None):
+    """Block-sparse transpose aggregation δcomb = Pᵀ·δz (see gcn_spmm.py)."""
+    return _spmm.spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz,
+                                     num_cols,
+                                     interpret=_auto_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "q_block", "kv_block",
                                    "interpret"))
 def attention(q, k, v, causal: bool = True, window: int = 0,
@@ -42,4 +51,5 @@ def attention(q, k, v, causal: bool = True, window: int = 0,
 
 
 build_tiles = _spmm.build_tiles
+build_tile_topology = _spmm.build_tile_topology
 tile_density = _spmm.tile_density

@@ -10,21 +10,30 @@ Production target: TPU v5e, 256 chips/pod.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh(shape, axes):
+    """Version-compat mesh construction: `axis_types` (Auto) where the
+    installed JAX supports it (≥0.5), plain `jax.make_mesh` on 0.4.x."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(num_devices: int | None = None, axis: str = "parts"):
     """1-D mesh over available (possibly forced-host) devices, for the
     PipeGCN SPMD backend and small-scale tests."""
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), (axis,))
 
 
 # Hardware constants for the roofline model (TPU v5e).

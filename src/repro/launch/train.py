@@ -4,7 +4,8 @@ Two workload kinds behind one CLI:
 
   GCN full-graph training (the paper):
     python -m repro.launch.train --workload gcn --dataset reddit-sim \
-        --partitions 4 --variant pipegcn-gf --epochs 300
+        --partitions 4 --variant pipegcn-gf --epochs 300 \
+        --agg blocksparse      # Pallas block-sparse aggregation engine
 
   Transformer LM training (assigned archs, reduced or full config):
     python -m repro.launch.train --workload lm --arch qwen3-8b --reduced \
@@ -30,20 +31,23 @@ from repro.optim import adamw, linear_warmup_cosine
 
 def run_gcn(args) -> dict:
     pipeline = GraphDataPipeline.build(args.dataset, args.partitions,
-                                       kind=args.gcn_kind, seed=args.seed)
+                                       kind=args.gcn_kind, seed=args.seed,
+                                       agg=args.agg)
     tpl = model_template(args.dataset)
     mc = ModelConfig(kind=args.gcn_kind, feat_dim=pipeline.dataset.feat_dim,
                      hidden=args.hidden or tpl["hidden"],
                      num_layers=args.layers or tpl["num_layers"],
                      num_classes=pipeline.dataset.num_classes,
                      dropout=tpl["dropout"],
-                     multilabel=pipeline.dataset.multilabel)
+                     multilabel=pipeline.dataset.multilabel,
+                     agg=args.agg)
     pc = PipeConfig.named(args.variant, gamma=args.gamma)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
                         eval_every=args.eval_every, log=print)
     out = {"workload": "gcn", "dataset": args.dataset,
            "partitions": args.partitions, "variant": args.variant,
+           "agg": args.agg,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
     if args.ckpt_dir:
@@ -109,6 +113,8 @@ def main():
     ap.add_argument("--variant", default="pipegcn",
                     help="vanilla|pipegcn|pipegcn-g|pipegcn-f|pipegcn-gf")
     ap.add_argument("--gcn-kind", default="sage", choices=["sage", "gcn"])
+    ap.add_argument("--agg", default="coo", choices=["coo", "blocksparse"],
+                    help="aggregation engine for the Eq. 3/4 SpMM")
     ap.add_argument("--gamma", type=float, default=0.95)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--eval-every", type=int, default=20)

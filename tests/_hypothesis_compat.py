@@ -1,0 +1,69 @@
+"""Hypothesis shim: re-export the real library when installed, otherwise a
+deterministic fixed-seed fallback so the suite always collects and runs.
+
+The fallback implements just the strategy surface these tests use
+(integers, floats, booleans, sampled_from) and runs each @given test over
+`max_examples` draws from a seeded RNG — a property *sweep* rather than a
+property *search*, but fully deterministic and dependency-free.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+    st = _Strategies()
+    strategies = st
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # No functools.wraps: pytest must see a zero-arg signature, not
+            # the strategy parameters (it would look for fixtures named n,
+            # seed, ...). Name/doc are copied for readable reports.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 10)
+            return wrapper
+        return deco

@@ -1,7 +1,10 @@
-"""Graph substrate: CSR, normalization, partitioner invariants, halo builder."""
+"""Graph substrate: CSR, normalization, partitioner invariants, halo builder.
+
+Property sweeps use hypothesis when installed, else the deterministic
+fixed-seed fallback in _hypothesis_compat."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph import (build_partitioned_graph, coo_to_csr, make_dataset,
                          partition_graph)

@@ -1,10 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles: hypothesis sweeps over shapes, dtypes,
-densities, and masking modes (interpret mode on CPU)."""
+"""Pallas kernels vs pure-jnp oracles: property sweeps over shapes, dtypes,
+densities, and masking modes (interpret mode on CPU). Sweeps use hypothesis
+when installed, else the deterministic fallback in _hypothesis_compat."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.gcn_spmm import TILE, build_tiles, spmm_block_sparse

@@ -38,13 +38,12 @@ SCRIPT = textwrap.dedent("""
         data = data._replace(x=data.x.astype(jnp.float64))
         b_sim = model.init_buffers(topo, dtype=jnp.float64)
         b_spmd = model.init_buffers(topo, dtype=jnp.float64)
+        from repro.launch.mesh import make_mesh
         if axis_spec == "1d":
-            mesh = jax.make_mesh((nparts,), ("parts",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_mesh((nparts,), ("parts",))
             axis = "parts"
         else:
-            mesh = jax.make_mesh((2, nparts // 2), ("a", "b"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_mesh((2, nparts // 2), ("a", "b"))
             axis = ("a", "b")
         step = model.make_spmd_step(mesh, topo, axis)
         for t in range(3):

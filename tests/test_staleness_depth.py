@@ -154,8 +154,8 @@ SPMD_SCRIPT = textwrap.dedent("""
     data = data._replace(x=data.x.astype(jnp.float64))
     b1 = model.init_buffers(topo, dtype=jnp.float64)
     b2 = model.init_buffers(topo, dtype=jnp.float64)
-    mesh = jax.make_mesh((4,), ("parts",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("parts",))
     step = model.make_spmd_step(mesh, topo, "parts")
     for t in range(4):
         key = jax.random.PRNGKey(t)
