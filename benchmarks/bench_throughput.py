@@ -12,6 +12,10 @@ Three views:
       tile streams, so only ``ModelConfig.agg`` changes). On CPU the Pallas
       kernels run in interpret mode, so (c) is an engine-dispatch/parity
       check, not an MXU speedup measurement.
+  (d) SPMD step time vs partitions-per-device (n_local) at fixed P=8 on
+      forced host devices — the decoupled partition/device axis; on real
+      hardware this is the knob that trades per-device memory for
+      interconnect fan-out.
 """
 from __future__ import annotations
 
@@ -74,6 +78,70 @@ def run_engine_comparison(quick: bool = False):
     return out
 
 
+_LOCAL_SWEEP_SCRIPT = """
+import os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.core import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN
+from repro.data import GraphDataPipeline
+from repro.launch.mesh import make_partition_mesh
+
+name, iters = sys.argv[1], int(sys.argv[2])
+n_locals = [int(x) for x in sys.argv[3].split(",")]
+P = 8
+pipeline = GraphDataPipeline.build(name, P, kind="sage")
+mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim, hidden=64,
+                 num_layers=2, num_classes=pipeline.dataset.num_classes,
+                 dropout=0.0)
+model = PipeGCN(mc, PipeConfig.named("pipegcn"))
+params = model.init_params(jax.random.PRNGKey(0))
+key = jax.random.PRNGKey(1)
+for nl in n_locals:
+    mesh = make_partition_mesh(P, parts_per_device=nl)
+    step = model.make_spmd_step(mesh, pipeline.topo, "parts")
+    bufs = model.init_buffers(pipeline.topo)
+    loss, _, _, bufs = step(pipeline.topo, params, bufs,
+                            pipeline.train_data, key)   # warmup/compile
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        loss, _, _, bufs = step(pipeline.topo, params, bufs,
+                                pipeline.train_data, key)
+    jax.block_until_ready(loss)
+    dt = (time.perf_counter() - t0) / iters
+    print(f"RESULT,{nl},{dt * 1e6:.2f}", flush=True)
+"""
+
+
+def run_local_sweep(quick: bool = False):
+    """Step time vs partitions-per-device at fixed P=8: the same 8-partition
+    graph on 8, 4, 2 (and 1) forced host devices. Needs its own process so
+    the forced device count doesn't leak into the caller's jax runtime."""
+    import os
+    import subprocess
+    import sys
+
+    name = "tiny" if quick else "small"
+    n_locals = "1,2,4" if quick else "1,2,4,8"
+    iters = 2 if quick else 4
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _LOCAL_SWEEP_SCRIPT, name, str(iters),
+         n_locals], env=env, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"local sweep failed:\n{proc.stderr[-2000:]}")
+    out = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, nl, us = line.split(",")
+            out[int(nl)] = float(us)
+            emit(f"fig3/spmd_step_local/{name}/p8/nl{nl}", float(us),
+                 f"n_dev={8 // int(nl)},step_per_s={1e6 / float(us):.2f}")
+    return out
+
+
 def run(quick: bool = False):
     cases = CASES[:2] if quick else CASES
     out = []
@@ -97,6 +165,7 @@ def run(quick: bool = False):
                  f"epochs_per_s={1.0 / t:.2f}")
         out.append((name, parts, m.speedup, wall))
     run_engine_comparison(quick=quick)
+    run_local_sweep(quick=quick)
     return out
 
 

@@ -1,7 +1,9 @@
 """The deployable SPMD path end-to-end: PipeGCN under `jax.shard_map` with
-one graph partition per device (8 forced host devices standing in for
-chips), boundary exchange via `all_to_all`, Adam training, and a final
-equality check against the single-device sim backend.
+the partition count DECOUPLED from the device count — 8 graph partitions on
+4 of the 8 forced host devices (2 co-resident partitions each, hierarchical
+boundary exchange), Adam training, and a final equality check against the
+single-device sim backend. Set PARTS_PER_DEVICE=1 for the classic
+one-partition-per-chip layout.
 
     PYTHONPATH=src python examples/pipegcn_spmd.py
 """
@@ -23,11 +25,11 @@ from repro.data import GraphDataPipeline
 from repro.optim import adam
 
 PARTS = 8
+PARTS_PER_DEVICE = 2
 EPOCHS = 60
 
 
 def main():
-    print(f"devices: {len(jax.devices())}")
     pipeline = GraphDataPipeline.build("tiny", num_parts=PARTS, kind="sage")
     mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
                      hidden=32, num_layers=2,
@@ -35,8 +37,10 @@ def main():
     model = PipeGCN(mc, PipeConfig.named("pipegcn-gf", gamma=0.5))
     topo = pipeline.topo
 
-    from repro.launch.mesh import make_mesh
-    mesh = make_mesh((PARTS,), ("parts",))
+    from repro.launch.mesh import make_partition_mesh
+    mesh = make_partition_mesh(PARTS, parts_per_device=PARTS_PER_DEVICE)
+    print(f"devices: {len(jax.devices())}, mesh: {mesh.shape}, "
+          f"partitions: {PARTS} ({PARTS_PER_DEVICE}/device)")
     spmd_step = model.make_spmd_step(mesh, topo, "parts")
 
     opt = adam(0.01)

@@ -4,9 +4,10 @@ from repro.core.pipegcn import (PipeGCN, ShardedData, Topology,
                                 SimBackend, SpmdBackend,
                                 shard_data, topology_from)
 from repro.core.module import make_pipegcn_loss
-from repro.core.trainer import TrainResult, make_jitted_train_step, train_pipegcn
+from repro.core.trainer import (TrainResult, make_jitted_train_step,
+                                make_spmd_train_step, train_pipegcn)
 
 __all__ = ["ModelConfig", "PipeConfig", "PipeGCN", "ShardedData", "Topology",
            "SimBackend", "SpmdBackend", "shard_data", "topology_from",
-           "TrainResult", "make_jitted_train_step", "train_pipegcn",
-           "make_pipegcn_loss"]
+           "TrainResult", "make_jitted_train_step", "make_spmd_train_step",
+           "train_pipegcn", "make_pipegcn_loss"]

@@ -163,6 +163,67 @@ def _scatter_recv(contrib, send_idx, send_mask, max_inner):
 
 
 # ----------------------------------------------------------------------
+# Hierarchical exchange: P partitions on P // n_local devices.
+#
+# Partition p lives on device p // n_local (device-major layout, matching
+# how a (P, ...) array shards over a 1-D mesh axis). Per device, the send
+# tensor s[l, j] is the payload from co-resident partition l to global
+# partition j. The exchange blocks the global P axis as (n_dev, n_local):
+# the two local axes are permuted by pure reshapes/transposes (the
+# co-resident partition pairs — including the whole exchange when
+# n_dev == 1 — never touch the interconnect; XLA's AllToAll keeps the
+# self-chunk in HBM) and only the device axis crosses the wire, in ONE
+# all_to_all of (n_local x n_local) blocks. Boundary traffic per device
+# stays O(P * slot * F) with no redundant self-sends.
+# ----------------------------------------------------------------------
+
+def _hier_pack(s, n_local):
+    """(n_local, P, ...) send tensor -> (n_dev, l_src, l_dst, ...) blocks,
+    device-major along axis 0 (the only axis the all_to_all splits)."""
+    n_dev = s.shape[1] // n_local
+    a = s.reshape((n_local, n_dev, n_local) + s.shape[2:])
+    return jnp.swapaxes(a, 0, 1)
+
+
+def _hier_unpack(recv, n_local):
+    """(n_dev, l_src, l_dst, ...) received blocks -> (n_local, P, ...):
+    row l = payloads addressed to co-resident partition l, indexed by
+    global sender id (device-major, matching the send layout)."""
+    n_dev = recv.shape[0]
+    r = jnp.moveaxis(recv, 2, 0)
+    return r.reshape((n_local, n_dev * n_local) + recv.shape[3:])
+
+
+def hierarchical_exchange(s, axis_name, n_local):
+    """Per-device exchange of (n_local, P, slot, F) boundary payloads:
+    local shuffle (reshape/transpose) for co-resident partition pairs fused
+    with a single inter-device all_to_all for the remote blocks."""
+    blocks = _hier_pack(s, n_local)
+    recv = jax.lax.all_to_all(blocks, axis_name, 0, 0, tiled=True)
+    return _hier_unpack(recv, n_local)
+
+
+def hierarchical_exchange_host(S):
+    """Single-process reference evaluation of `hierarchical_exchange` on a
+    global (n_dev, n_local, P, ...) payload with the device axis explicit:
+    the all_to_all is replaced by its definition (device d's chunk j lands
+    on device j at position d, i.e. a transpose of the two device axes)."""
+    n_local = S.shape[1]
+    blocks = jax.vmap(lambda s: _hier_pack(s, n_local))(S)
+    recv = jnp.swapaxes(blocks, 0, 1)
+    return jax.vmap(lambda r: _hier_unpack(r, n_local))(recv)
+
+
+def flat_exchange_reference(S):
+    """The flat global exchange R[i, j] = S[j, i] over global partition ids,
+    reshaped to the same (n_dev, n_local, P, ...) device layout — the
+    specification `hierarchical_exchange` must match."""
+    n_dev, n_local, p = S.shape[:3]
+    flat = S.reshape((n_dev * n_local, p) + S.shape[3:])
+    return jnp.swapaxes(flat, 0, 1).reshape(S.shape)
+
+
+# ----------------------------------------------------------------------
 # Backends: the four sync points.
 # ----------------------------------------------------------------------
 
@@ -170,6 +231,7 @@ class SimBackend:
     """Partitions as leading axis on a single device."""
 
     is_spmd = False
+    lead_axis = True   # arrays carry a leading (local-)partition axis
 
     def pmap(self, f):
         return jax.vmap(f)
@@ -181,8 +243,8 @@ class SimBackend:
     def psum(self, x):
         return jnp.sum(x, axis=0)
 
-    def pmean_scalar(self, num, den):
-        return jnp.sum(num) / jnp.maximum(jnp.sum(den), 1.0)
+    def psum_scalar(self, x):
+        return jnp.sum(x)
 
     def dropout_mask(self, key, rate, shape_per_part, num_parts):
         shape = (num_parts,) + tuple(shape_per_part)
@@ -193,30 +255,53 @@ class SimBackend:
 class SpmdBackend:
     """Runs inside shard_map over `axis_name` (a mesh axis or tuple of axes
     — the production mesh flattens ("data","model") into the partition
-    axis); one partition per device."""
+    axis). With `n_local` > 1 each device hosts n_local co-resident
+    partitions as a leading local axis (same layout the sim backend uses
+    for all P), and the boundary exchange goes hierarchical: a local
+    shuffle for co-resident pairs + one inter-device all_to_all."""
 
     is_spmd = True
 
-    def __init__(self, axis_name="parts"):
+    def __init__(self, axis_name="parts", n_local: int = 1):
         self.axis_name = axis_name
+        self.n_local = n_local
+        self.lead_axis = n_local > 1
 
     def pmap(self, f):
         return f
 
+    def _global_part_offset(self):
+        """Global partition id of this device's local partition 0."""
+        return jax.lax.axis_index(self.axis_name) * self.n_local
+
     def exchange(self, s):
-        # s: (P, slot, F) per device
-        return jax.lax.all_to_all(s, self.axis_name, 0, 0, tiled=True)
+        # s: (P, slot, F) per device, or (n_local, P, slot, F) when >1
+        # partition is co-resident.
+        if not self.lead_axis:
+            return jax.lax.all_to_all(s, self.axis_name, 0, 0, tiled=True)
+        return hierarchical_exchange(s, self.axis_name, self.n_local)
 
     def psum(self, x):
+        if self.lead_axis:                 # fold co-resident partitions first
+            x = jnp.sum(x, axis=0)
         return jax.lax.psum(x, self.axis_name)
 
-    def pmean_scalar(self, num, den):
-        return (jax.lax.psum(num, self.axis_name)
-                / jnp.maximum(jax.lax.psum(den, self.axis_name), 1.0))
+    def psum_scalar(self, x):
+        return jax.lax.psum(x, self.axis_name)
 
     def dropout_mask(self, key, rate, shape_per_part, num_parts):
-        key = jax.random.fold_in(key, jax.lax.axis_index(self.axis_name))
-        keep = jax.random.bernoulli(key, 1.0 - rate, tuple(shape_per_part))
+        base = self._global_part_offset()
+        if not self.lead_axis:
+            key = jax.random.fold_in(key, base)
+            keep = jax.random.bernoulli(key, 1.0 - rate, tuple(shape_per_part))
+            return keep.astype(jnp.float32) / (1.0 - rate)
+        # One independent stream per global partition id, so the mask a
+        # partition sees is invariant to how partitions map onto devices.
+        keys = jax.vmap(lambda l: jax.random.fold_in(key, base + l))(
+            jnp.arange(self.n_local))
+        keep = jax.vmap(
+            lambda k: jax.random.bernoulli(k, 1.0 - rate,
+                                           tuple(shape_per_part)))(keys)
         return keep.astype(jnp.float32) / (1.0 - rate)
 
 
@@ -353,12 +438,13 @@ class PipeGCN:
 
         tslice = self._agg_slice(topo)
         send_idx, send_mask = topo.send_idx, topo.send_mask
-        if backend.is_spmd:
-            gather = _gather_send
-            scatter = partial(_scatter_recv, max_inner=max_inner)
-        else:
+        lead = backend.lead_axis
+        if lead:
             gather = jax.vmap(_gather_send)
             scatter = jax.vmap(partial(_scatter_recv, max_inner=max_inner))
+        else:
+            gather = _gather_send
+            scatter = partial(_scatter_recv, max_inner=max_inner)
 
         h = data.x
         residuals = []
@@ -398,7 +484,7 @@ class PipeGCN:
             else:
                 dm = None
 
-            if backend.is_spmd:
+            if not lead:
                 u, (comb, a) = self._layer_forward(
                     tslice, params[f"w{ell}"], params[f"b{ell}"], h, halo, dm)
             else:
@@ -419,12 +505,10 @@ class PipeGCN:
             count_local = jnp.sum(mask) * self.model.num_classes
         else:
             count_local = jnp.sum(mask)
-        total = backend.psum(count_local) if backend.is_spmd else jnp.sum(count_local)
-        total = jnp.maximum(total, 1.0)
+        total = jnp.maximum(backend.psum_scalar(count_local), 1.0)
         loss_fn = _bce_loss_and_grad if self.model.multilabel else _ce_loss_and_grad
         loss_local, dlogits = loss_fn(logits, data.labels, mask, total, backend)
-        loss = (backend.psum(loss_local) if backend.is_spmd
-                else jnp.sum(loss_local)) / total
+        loss = backend.psum_scalar(loss_local) / total
 
         if not train:
             return loss, logits, None, None
@@ -443,7 +527,7 @@ class PipeGCN:
             if ell == 0:
                 new_grad[ell] = buffers["grad"][ell]
                 break
-            if backend.is_spmd:
+            if not lead:
                 dh_local, db = self._layer_backward(
                     tslice, params[f"w{ell}"], du, comb, dm, max_inner)
             else:
@@ -511,38 +595,51 @@ class PipeGCN:
         Arrays with leading partition axis are sharded over `axis_name`;
         params are replicated; the returned function has the same signature
         as `train_step` (plus data), operating on global arrays.
+
+        The partition count is decoupled from the device count: with
+        P = num_parts a multiple of the mesh size, each device hosts
+        n_local = P // n_devices co-resident partitions (device-major:
+        partition p on device p // n_local) and the boundary exchange runs
+        hierarchically (`hierarchical_exchange`).
         """
         from jax.sharding import PartitionSpec as PS
 
-        backend = SpmdBackend(axis_name)
         pspec = PS(axis_name)
         axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
         n_devices = 1
         for a in axes:
             n_devices *= mesh.shape[a]
+        if topo.num_parts % n_devices:
+            raise ValueError(
+                f"num_parts={topo.num_parts} must be a multiple of the mesh "
+                f"size {n_devices} (axes {axes})")
         n_local = topo.num_parts // n_devices
+        backend = SpmdBackend(axis_name, n_local=n_local)
 
         kq = self.pipe.staleness_steps
 
         def per_device(topo_l, params, buffers, data, key):
-            # shard_map leaves a leading axis of size P/num_devices: vmap it
-            # when >1 partition per device, else squeeze. Buffer queues
-            # (k-step staleness) carry the partition axis at position 1.
-            def one(topo1, bufs1, data1):
-                return self._step_impl(backend, Topology(*topo1), params,
-                                       bufs1, ShardedData(*data1), key, train)
+            # shard_map leaves a leading axis of size n_local = P/num_devices.
+            # n_local == 1: squeeze it and run the per-partition body.
+            # n_local  > 1: keep it — _step_impl treats it exactly like the
+            # sim backend's partition axis (vmapped layer math), with the
+            # collectives local-axis-aware. Buffer queues (k-step staleness)
+            # carry the partition axis at position 1 in both cases.
             if n_local == 1:
                 topo1 = jax.tree.map(lambda x: x[0], tuple(topo_l))
                 bsq = (lambda x: x[:, 0]) if kq > 1 else (lambda x: x[0])
                 bufs1 = jax.tree.map(bsq, buffers)
                 data1 = jax.tree.map(lambda x: x[0], tuple(data))
-                loss, logits, grads, newb = one(topo1, bufs1, data1)
+                loss, logits, grads, newb = self._step_impl(
+                    backend, Topology(*topo1), params, bufs1,
+                    ShardedData(*data1), key, train)
                 logits = logits[None]
                 bex = (lambda x: x[:, None]) if kq > 1 else (lambda x: x[None])
                 newb = None if newb is None else jax.tree.map(bex, newb)
-            else:  # pragma: no cover - multi-partition-per-device path
-                raise NotImplementedError(
-                    "one partition per device is required")
+            else:
+                loss, logits, grads, newb = self._step_impl(
+                    backend, Topology(*topo_l), params, buffers,
+                    ShardedData(*data), key, train)
             return loss, logits, grads, newb
 
         def step(topo_g, params, buffers, data, key):

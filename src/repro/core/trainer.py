@@ -42,10 +42,33 @@ def make_jitted_train_step(model: PipeGCN, opt: Optimizer):
     return jax.jit(step, donate_argnums=(3,))
 
 
+def make_spmd_train_step(model: PipeGCN, opt: Optimizer, mesh, topo: Topology,
+                         axis_name: str = "parts"):
+    """`make_jitted_train_step` analogue on a device mesh: the PipeGCN step
+    runs under shard_map over `axis_name` (any partitions-per-device ratio,
+    see `PipeGCN.make_spmd_step`); the optimizer update applies to the
+    replicated grads. Same signature/returns as the sim-backend step."""
+    spmd_step = model.make_spmd_step(mesh, topo, axis_name, train=True)
+
+    def step(topo, params, opt_state, buffers, data, key):
+        loss, _, grads, new_buffers = spmd_step(topo, params, buffers, data,
+                                                key)
+        new_params, new_opt_state = opt.apply(params, grads, opt_state)
+        return loss, new_params, new_opt_state, new_buffers
+
+    return jax.jit(step, donate_argnums=(3,))
+
+
 def train_pipegcn(pipeline, model_cfg: ModelConfig,
                   pipe_cfg: PipeConfig, epochs: int, lr: float = 0.01,
                   seed: int = 0, eval_every: int = 10,
-                  log: Callable[[str], None] | None = None) -> TrainResult:
+                  log: Callable[[str], None] | None = None,
+                  mesh=None, axis_name: str = "parts") -> TrainResult:
+    """Reference training loop. With `mesh=None` the step runs on the sim
+    backend (single device, partitions vmapped); passing a mesh runs the
+    same model under shard_map — partitions need only be a multiple of the
+    mesh size (multi-partition-per-device SPMD). Eval stays on the sim
+    backend either way (global arrays round-trip between backends)."""
     model = PipeGCN(model_cfg, pipe_cfg)
     topo = pipeline.topo
     # Fail fast (before tracing) if the selected aggregation engine needs
@@ -55,7 +78,8 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
     opt = adam(lr)
     opt_state = opt.init(params)
     buffers = model.init_buffers(topo)
-    step = make_jitted_train_step(model, opt)
+    step = (make_spmd_train_step(model, opt, mesh, topo, axis_name)
+            if mesh is not None else make_jitted_train_step(model, opt))
     fwd = jax.jit(lambda t, p, d: model.forward(t, p, d)[1])
 
     history = {"loss": [], "val_acc": [], "test_acc": [], "epoch": []}

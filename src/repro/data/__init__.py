@@ -1,4 +1,6 @@
 from repro.data.tokens import TokenStream, synthetic_token_batches
-from repro.data.graph_pipeline import GraphDataPipeline
+from repro.data.graph_pipeline import (GraphDataPipeline, from_local_layout,
+                                       to_local_layout)
 
-__all__ = ["TokenStream", "synthetic_token_batches", "GraphDataPipeline"]
+__all__ = ["TokenStream", "synthetic_token_batches", "GraphDataPipeline",
+           "to_local_layout", "from_local_layout"]

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pipegcn import ShardedData, Topology, shard_data, topology_from
@@ -16,6 +18,37 @@ from repro.graph.csr import mean_normalized, sym_normalized
 from repro.graph.halo import PartitionedGraph, build_partitioned_graph
 from repro.graph.partition import partition_graph
 from repro.graph.synthetic import GraphDataset, make_dataset
+
+
+def to_local_layout(tree, n_local: int, axis: int = 0):
+    """Reshape every (…, P, …) leading-partition array in a pytree to the
+    physical per-device view (…, n_dev, n_local, …) used by the
+    multi-partition-per-device SPMD path (device-major: partition p lives
+    on device p // n_local). `axis` is the partition axis (0 for Topology /
+    ShardedData arrays, 1 for k-step staleness buffer queues)."""
+
+    def r(x):
+        p = x.shape[axis]
+        if p % n_local:
+            raise ValueError(
+                f"partition axis {axis} has size {p}, not a multiple of "
+                f"n_local={n_local}")
+        shape = x.shape[:axis] + (p // n_local, n_local) + x.shape[axis + 1:]
+        return x.reshape(shape)
+
+    return jax.tree.map(r, tree)
+
+
+def from_local_layout(tree, axis: int = 0):
+    """Inverse of `to_local_layout`: merge the (n_dev, n_local) pair at
+    `axis` back into a flat partition axis."""
+
+    def r(x):
+        shape = (x.shape[:axis] + (x.shape[axis] * x.shape[axis + 1],)
+                 + x.shape[axis + 2:])
+        return x.reshape(shape)
+
+    return jax.tree.map(r, tree)
 
 
 @dataclasses.dataclass
@@ -39,12 +72,30 @@ class GraphDataPipeline:
                                method=partition_method)
         pg = build_partitioned_graph(prop, part, num_parts)
         topo = topology_from(pg, with_tiles=(agg == "blocksparse"))
-        mk = lambda m: shard_data(pg, ds.features, ds.labels, ds.train_mask, m)
+        # x/labels/train_mask are split-independent: pack them ONCE and share
+        # the arrays across the three views; only eval_mask differs per split.
+        base = shard_data(pg, ds.features, ds.labels, ds.train_mask,
+                          ds.val_mask)
         return GraphDataPipeline(
             dataset=ds, pg=pg, topo=topo,
-            train_data=mk(ds.val_mask),
-            val_data=mk(ds.val_mask),
-            test_data=mk(ds.test_mask), agg=agg)
+            train_data=base._replace(eval_mask=base.train_mask),
+            val_data=base,
+            test_data=base._replace(
+                eval_mask=jnp.asarray(pg.pack_nodes(np.asarray(ds.test_mask)))),
+            agg=agg)
+
+    def device_layout(self, num_devices: int):
+        """Explicit (n_dev, n_local, ...) per-device view of (topo, data)
+        for num_devices hosts — the physical layout `make_spmd_step` induces
+        when sharding the flat partition axis over a smaller mesh."""
+        if self.topo.num_parts % num_devices:
+            raise ValueError(
+                f"num_parts={self.topo.num_parts} is not a multiple of "
+                f"num_devices={num_devices}")
+        n_local = self.topo.num_parts // num_devices
+        topo = Topology(*to_local_layout(tuple(self.topo), n_local))
+        data = ShardedData(*to_local_layout(tuple(self.train_data), n_local))
+        return topo, data
 
     def metric(self, logits_packed) -> dict:
         """Global accuracy (single-label) or F1-micro (multilabel) on

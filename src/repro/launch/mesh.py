@@ -12,15 +12,17 @@ from __future__ import annotations
 import jax
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """Version-compat mesh construction: `axis_types` (Auto) where the
-    installed JAX supports it (≥0.5), plain `jax.make_mesh` on 0.4.x."""
+    installed JAX supports it (≥0.5), plain `jax.make_mesh` on 0.4.x.
+    `devices` (optional) selects an explicit subset — needed when the mesh
+    is smaller than the platform (multi-partition-per-device runs)."""
     try:
         from jax.sharding import AxisType
-        return jax.make_mesh(tuple(shape), tuple(axes),
+        return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
                              axis_types=(AxisType.Auto,) * len(axes))
     except (ImportError, TypeError):
-        return jax.make_mesh(tuple(shape), tuple(axes))
+        return jax.make_mesh(tuple(shape), tuple(axes), devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -34,6 +36,39 @@ def make_host_mesh(num_devices: int | None = None, axis: str = "parts"):
     PipeGCN SPMD backend and small-scale tests."""
     n = num_devices or len(jax.devices())
     return make_mesh((n,), (axis,))
+
+
+def partition_layout(num_parts: int, parts_per_device: int = 1,
+                     num_devices: int | None = None) -> tuple[int, int]:
+    """Device→partition mapping for the decoupled SPMD path.
+
+    Returns (n_devices, n_local) with num_parts = n_devices * n_local;
+    partition p lives on device p // n_local (device-major, matching how a
+    (P, ...) leading-axis array shards over a 1-D mesh). The partition
+    count is a convergence/accuracy knob (paper Tab. 4 sweeps 2–16), so it
+    must not be pinned to whatever hardware is present."""
+    if parts_per_device < 1:
+        raise ValueError(f"parts_per_device must be >= 1, got {parts_per_device}")
+    if num_parts % parts_per_device:
+        raise ValueError(
+            f"num_parts={num_parts} is not a multiple of "
+            f"parts_per_device={parts_per_device}")
+    n_dev = num_parts // parts_per_device
+    avail = num_devices if num_devices is not None else len(jax.devices())
+    if n_dev > avail:
+        raise ValueError(
+            f"num_parts={num_parts} / parts_per_device={parts_per_device} "
+            f"needs {n_dev} devices but only {avail} are available — raise "
+            "parts_per_device")
+    return n_dev, parts_per_device
+
+
+def make_partition_mesh(num_parts: int, parts_per_device: int = 1,
+                        axis: str = "parts"):
+    """1-D mesh sized num_parts // parts_per_device over the first devices,
+    for `PipeGCN.make_spmd_step` with any partitions-per-device ratio."""
+    n_dev, _ = partition_layout(num_parts, parts_per_device)
+    return make_mesh((n_dev,), (axis,), devices=jax.devices()[:n_dev])
 
 
 # Hardware constants for the roofline model (TPU v5e).

@@ -33,6 +33,13 @@ def run_gcn(args) -> dict:
     pipeline = GraphDataPipeline.build(args.dataset, args.partitions,
                                        kind=args.gcn_kind, seed=args.seed,
                                        agg=args.agg)
+    mesh = None
+    if args.spmd:
+        # Partition count is a convergence knob, device count a hardware
+        # fact: the mesh is sized partitions // parts_per_device and each
+        # device hosts parts_per_device co-resident partitions.
+        from repro.launch.mesh import make_partition_mesh
+        mesh = make_partition_mesh(args.partitions, args.parts_per_device)
     tpl = model_template(args.dataset)
     mc = ModelConfig(kind=args.gcn_kind, feat_dim=pipeline.dataset.feat_dim,
                      hidden=args.hidden or tpl["hidden"],
@@ -44,9 +51,11 @@ def run_gcn(args) -> dict:
     pc = PipeConfig.named(args.variant, gamma=args.gamma)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
-                        eval_every=args.eval_every, log=print)
+                        eval_every=args.eval_every, log=print, mesh=mesh)
     out = {"workload": "gcn", "dataset": args.dataset,
            "partitions": args.partitions, "variant": args.variant,
+           "spmd": bool(args.spmd),
+           "parts_per_device": args.parts_per_device,
            "agg": args.agg,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
@@ -115,6 +124,13 @@ def main():
     ap.add_argument("--gcn-kind", default="sage", choices=["sage", "gcn"])
     ap.add_argument("--agg", default="coo", choices=["coo", "blocksparse"],
                     help="aggregation engine for the Eq. 3/4 SpMM")
+    ap.add_argument("--spmd", action="store_true",
+                    help="run the step under shard_map on a device mesh "
+                         "instead of the single-device sim backend")
+    ap.add_argument("--parts-per-device", type=int, default=1,
+                    help="co-resident partitions per device for --spmd "
+                         "(partitions must be a multiple; mesh size = "
+                         "partitions // parts_per_device)")
     ap.add_argument("--gamma", type=float, default=0.95)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--eval-every", type=int, default=20)

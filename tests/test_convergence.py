@@ -1,6 +1,10 @@
 """Paper-claim validation at test scale (Tab. 4 analogue): every PipeGCN
 variant reaches vanilla-level accuracy on a community graph; convergence is
-not degraded beyond the paper's observed band."""
+not degraded beyond the paper's observed band.
+
+Tier split: the full 120-epoch three-variant comparison is `slow` (it
+dominates tier-1 wall time); tier-1 keeps a 40-epoch smoke run that still
+asserts learning + near-perfect accuracy on the tiny community graph."""
 import numpy as np
 import pytest
 
@@ -8,12 +12,16 @@ from repro.core import ModelConfig, PipeConfig, train_pipegcn
 from repro.data import GraphDataPipeline
 
 
+def _model_cfg(pipeline):
+    return ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                       hidden=32, num_layers=2,
+                       num_classes=pipeline.dataset.num_classes, dropout=0.0)
+
+
 @pytest.fixture(scope="module")
 def trained():
     pipeline = GraphDataPipeline.build("tiny", num_parts=4, kind="sage")
-    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
-                     hidden=32, num_layers=2,
-                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+    mc = _model_cfg(pipeline)
     out = {}
     for name in ("vanilla", "pipegcn", "pipegcn-gf"):
         res = train_pipegcn(pipeline, mc, PipeConfig.named(name, gamma=0.5),
@@ -22,11 +30,23 @@ def trained():
     return out
 
 
+def test_convergence_smoke(tiny_pipeline):
+    """Tier-1: one staleness variant, 40 epochs — learns to high accuracy."""
+    res = train_pipegcn(tiny_pipeline, _model_cfg(tiny_pipeline),
+                        PipeConfig.named("pipegcn-gf", gamma=0.5),
+                        epochs=40, lr=0.01, eval_every=40)
+    assert res.final_metrics["test"] > 0.9, res.final_metrics
+    hist = res.history["loss"]
+    assert hist[-1] < hist[0] * 0.5, hist
+
+
+@pytest.mark.slow
 def test_all_variants_learn(trained):
     for name, res in trained.items():
         assert res.final_metrics["test"] > 0.9, (name, res.final_metrics)
 
 
+@pytest.mark.slow
 def test_pipegcn_matches_vanilla_accuracy(trained):
     """Paper Tab. 4: staleness costs at most ~0.3 accuracy points."""
     v = trained["vanilla"].final_metrics["test"]
@@ -35,6 +55,7 @@ def test_pipegcn_matches_vanilla_accuracy(trained):
             name, trained[name].final_metrics, v)
 
 
+@pytest.mark.slow
 def test_loss_decreases(trained):
     for name, res in trained.items():
         hist = res.history["loss"]

@@ -1,0 +1,48 @@
+"""GraphDataPipeline regression tests.
+
+PR-1 built `train_data` and `val_data` as two identical `ShardedData`
+objects (both packed with the val mask, each with its own copy of every
+array). The views must instead SHARE one packed array set — x / labels /
+train_mask are split-independent — and differ only in `eval_mask`, which
+must be the split's own mask."""
+import numpy as np
+
+
+def test_split_views_share_packed_arrays(tiny_pipeline):
+    p = tiny_pipeline
+    for a, b in ((p.train_data, p.val_data), (p.val_data, p.test_data)):
+        assert a.x is b.x
+        assert a.labels is b.labels
+        assert a.train_mask is b.train_mask
+
+
+def test_eval_masks_differ_per_split(tiny_pipeline):
+    p = tiny_pipeline
+    masks = {name: np.asarray(getattr(p, f"{name}_data").eval_mask)
+             for name in ("train", "val", "test")}
+    assert not np.array_equal(masks["train"], masks["val"])
+    assert not np.array_equal(masks["val"], masks["test"])
+    assert not np.array_equal(masks["train"], masks["test"])
+
+
+def test_eval_masks_unpack_to_dataset_splits(tiny_pipeline):
+    p, ds = tiny_pipeline, tiny_pipeline.dataset
+    for name, ref in (("train", ds.train_mask), ("val", ds.val_mask),
+                      ("test", ds.test_mask)):
+        packed = np.asarray(getattr(p, f"{name}_data").eval_mask)
+        np.testing.assert_array_equal(p.pg.unpack_nodes(packed), ref)
+
+
+def test_device_layout_view(tiny_pipeline):
+    """The explicit (n_dev, n_local, ...) view flattens back to the shard
+    arrays the SPMD step consumes."""
+    p = tiny_pipeline
+    topo_l, data_l = p.device_layout(2)
+    n_local = p.topo.num_parts // 2
+    assert data_l.x.shape == (2, n_local) + p.train_data.x.shape[1:]
+    np.testing.assert_array_equal(
+        np.asarray(data_l.x).reshape(p.train_data.x.shape),
+        np.asarray(p.train_data.x))
+    np.testing.assert_array_equal(
+        np.asarray(topo_l.send_idx).reshape(p.topo.send_idx.shape),
+        np.asarray(p.topo.send_idx))

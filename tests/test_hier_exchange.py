@@ -1,0 +1,94 @@
+"""Property tests for the hierarchical exchange primitive (the
+multi-partition-per-device SPMD boundary shuffle) in isolation: random
+(n_dev, n_local, P, slot, F) payloads evaluated through the host reference
+(`hierarchical_exchange_host`, the same pack/unpack math with the
+all_to_all replaced by its definition) must equal the flat global
+swapaxes exchange. Plus the (n_dev, n_local) shard-layout helpers."""
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.pipegcn import (SimBackend, flat_exchange_reference,
+                                hierarchical_exchange_host)
+from repro.data.graph_pipeline import from_local_layout, to_local_layout
+
+
+def _payload(n_dev, n_local, slot, f, seed):
+    p = n_dev * n_local
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n_dev, n_local, p, slot, f)))
+
+
+@settings(max_examples=30)
+@given(n_dev=st.integers(1, 4), n_local=st.integers(1, 4),
+       slot=st.integers(1, 3), f=st.integers(1, 5),
+       seed=st.integers(0, 2 ** 16))
+def test_hier_exchange_matches_flat_reference(n_dev, n_local, slot, f, seed):
+    s = _payload(n_dev, n_local, slot, f, seed)
+    np.testing.assert_array_equal(np.asarray(hierarchical_exchange_host(s)),
+                                  np.asarray(flat_exchange_reference(s)))
+
+
+@settings(max_examples=15)
+@given(n_dev=st.integers(1, 4), n_local=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_hier_exchange_is_involution(n_dev, n_local, seed):
+    """R[i, j] = S[j, i] applied twice is the identity."""
+    s = _payload(n_dev, n_local, 2, 3, seed)
+    twice = hierarchical_exchange_host(hierarchical_exchange_host(s))
+    np.testing.assert_array_equal(np.asarray(twice), np.asarray(s))
+
+
+def test_flat_reference_is_sim_backend_exchange():
+    """The specification itself: the flat reference over global partition
+    ids is exactly the sim backend's swapaxes exchange, resharded."""
+    n_dev, n_local, slot, f = 3, 2, 6, 4
+    s = _payload(n_dev, n_local, slot, f, seed=0)
+    p = n_dev * n_local
+    sim = SimBackend().exchange(s.reshape(p, p, slot, f))
+    ref = flat_exchange_reference(s).reshape(p, p, slot, f)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(sim))
+
+
+def test_single_device_exchange_is_pure_local_shuffle():
+    """n_dev == 1: the whole exchange is the co-resident local shuffle."""
+    s = _payload(1, 4, 2, 3, seed=1)
+    got = hierarchical_exchange_host(s)[0]
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.swapaxes(s[0], 0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# (n_dev, n_local) shard-layout helpers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20)
+@given(n_dev=st.integers(1, 5), n_local=st.integers(1, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_local_layout_round_trip_and_device_major(n_dev, n_local, seed):
+    p = n_dev * n_local
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(p, 3)))
+    packed = to_local_layout(x, n_local)
+    assert packed.shape == (n_dev, n_local, 3)
+    for part in (0, p // 2, p - 1):   # partition p lives on device p//n_local
+        np.testing.assert_array_equal(
+            np.asarray(packed[part // n_local, part % n_local]),
+            np.asarray(x[part]))
+    np.testing.assert_array_equal(np.asarray(from_local_layout(packed)),
+                                  np.asarray(x))
+
+
+def test_local_layout_queue_axis():
+    """k-step staleness buffers carry the partition axis at position 1."""
+    buf = jnp.arange(3 * 8 * 2, dtype=jnp.float32).reshape(3, 8, 2)
+    packed = to_local_layout(buf, 4, axis=1)
+    assert packed.shape == (3, 2, 4, 2)
+    np.testing.assert_array_equal(
+        np.asarray(from_local_layout(packed, axis=1)), np.asarray(buf))
+
+
+def test_local_layout_rejects_non_multiple():
+    import pytest
+    with pytest.raises(ValueError):
+        to_local_layout(jnp.zeros((6, 2)), 4)

@@ -1,7 +1,20 @@
-"""SPMD (shard_map + all_to_all) backend equivalence vs the sim backend.
+"""SPMD (shard_map) backend equivalence vs the sim backend, as a full
+parameterized matrix:
 
-Runs in a subprocess so this test alone sees 8 forced host devices; the
-rest of the suite keeps the single real device.
+    (variant  ∈ {vanilla, pipegcn, pipegcn-gf})
+  × (agg      ∈ {coo, blocksparse})
+  × (n_local  ∈ {1, 2, 4})      # co-resident partitions per device, P = 8
+
+plus coverage cells the matrix alone misses: bf16 boundary compression and
+k-step staleness FIFOs under the SPMD backend (both previously exercised
+only by the sim tests), and the production flattened-2D-axes layout.
+
+Every cell asserts 1e-12 float64 parity vs the sim backend for the loss,
+every weight gradient, and every pipeline buffer, over >=3 steps. The whole
+matrix runs in ONE subprocess so it alone sees 8 forced host devices; the
+rest of the suite keeps the single real device. One dataset/partitioning is
+built per process and the Topology carries tile streams alongside the COO
+shards, so both engines (and every n_local) run on identical inputs.
 """
 import os
 import subprocess
@@ -10,9 +23,33 @@ import textwrap
 
 import pytest
 
+# Cells are (variant, agg, n_local, pipe overrides, axis layout). Edit here.
+MATRIX = [(v, a, nl, {}, "1d")
+          for v in ("vanilla", "pipegcn", "pipegcn-gf")
+          for a in ("coo", "blocksparse")
+          for nl in (1, 2, 4)]
+EXTRA = [
+    # bf16 boundary compression under SPMD (cast happens before/after the
+    # exchange in both backends, so parity stays exact)
+    ("pipegcn", "coo", 1, {"compress_boundary": True}, "1d"),
+    ("pipegcn", "coo", 4, {"compress_boundary": True}, "1d"),
+    ("pipegcn-gf", "blocksparse", 2, {"compress_boundary": True}, "1d"),
+    # k-step staleness FIFO queues under SPMD (buffer queue axis 0, local
+    # partition axis 1)
+    ("pipegcn", "coo", 1, {"staleness_steps": 3}, "1d"),
+    ("pipegcn", "coo", 2, {"staleness_steps": 3}, "1d"),
+    ("pipegcn", "blocksparse", 4, {"staleness_steps": 2}, "1d"),
+    # production layout: flattened ("a","b") mesh axes as the partition
+    # axis, both through the flat n_local=1 all_to_all and the
+    # hierarchical n_local>1 exchange
+    ("pipegcn", "coo", 1, {}, "2d"),
+    ("pipegcn", "coo", 2, {}, "2d"),
+]
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
     import jax, numpy as np
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
@@ -20,57 +57,76 @@ SCRIPT = textwrap.dedent("""
     from repro.graph.csr import mean_normalized
     from repro.core.config import ModelConfig, PipeConfig
     from repro.core.pipegcn import PipeGCN, topology_from, shard_data
+    from repro.launch.mesh import make_mesh, make_partition_mesh
 
-    def run(nparts, axis_spec, variant):
-        ds = make_dataset("tiny")
-        prop = mean_normalized(ds.graph)
-        part = partition_graph(ds.graph, nparts, seed=0)
-        pg = build_partitioned_graph(prop, part, nparts)
-        topo = topology_from(pg)
-        topo = jax.tree.map(lambda x: x.astype(jnp.float64)
-                            if x.dtype == jnp.float32 else x, topo)
+    P = 8
+    ds = make_dataset("tiny")
+    prop = mean_normalized(ds.graph)
+    pg = build_partitioned_graph(prop, partition_graph(ds.graph, P, seed=0), P)
+    # One topology for every cell: COO shards in f64 for exact parity, tile
+    # streams staying f32 (the blocksparse engine computes in f32 either
+    # way — parity vs sim is still exact because both backends run the
+    # identical kernels on identical values).
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+
+    def run(variant, agg, n_local, pipe_kw, axis_spec, steps=3):
         mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
-                         num_layers=3, num_classes=ds.num_classes, dropout=0.0)
-        model = PipeGCN(mc, PipeConfig.named(variant, gamma=0.9))
+                         num_layers=3, num_classes=ds.num_classes,
+                         dropout=0.0, agg=agg)
+        pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.9),
+                                 **pipe_kw)
+        model = PipeGCN(mc, pc)
         params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
-        data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
-                          ds.train_mask, ds.val_mask)
-        data = data._replace(x=data.x.astype(jnp.float64))
         b_sim = model.init_buffers(topo, dtype=jnp.float64)
         b_spmd = model.init_buffers(topo, dtype=jnp.float64)
-        from repro.launch.mesh import make_mesh
-        if axis_spec == "1d":
-            mesh = make_mesh((nparts,), ("parts",))
-            axis = "parts"
-        else:
-            mesh = make_mesh((2, nparts // 2), ("a", "b"))
+        n_dev = P // n_local
+        if axis_spec == "2d":
+            mesh = make_mesh((2, n_dev // 2), ("a", "b"),
+                             devices=jax.devices()[:n_dev])
             axis = ("a", "b")
+        else:
+            mesh = make_partition_mesh(P, parts_per_device=n_local)
+            axis = "parts"
         step = model.make_spmd_step(mesh, topo, axis)
-        for t in range(3):
+        cell = (variant, agg, f"nl{n_local}", axis_spec, pipe_kw)
+        for t in range(steps):
             key = jax.random.PRNGKey(t)
             l1, g1, b_sim, _ = model.train_step(topo, params, b_sim, data, key)
             l2, _, g2, b_spmd = step(topo, params, b_spmd, data, key)
-            assert abs(float(l1) - float(l2)) < 1e-12, (variant, t)
+            assert abs(float(l1) - float(l2)) < 1e-12, ("loss", cell, t)
             for k in g1:
                 d = float(jnp.abs(g1[k] - jnp.asarray(g2[k])).max())
-                assert d < 1e-12, (variant, t, k, d)
+                assert d < 1e-12, ("grad", cell, t, k, d)
             for a, b in zip(jax.tree.leaves(b_sim), jax.tree.leaves(b_spmd)):
-                assert float(jnp.abs(a - b).max()) < 1e-12
-        print(f"{variant}/{axis_spec}: OK")
+                d = float(jnp.abs(a - jnp.asarray(b)).max())
+                assert d < 1e-12, ("buffers", cell, t, d)
+        print(f"OK {variant}/{agg}/nl{n_local}/{axis_spec}/{pipe_kw}",
+              flush=True)
 
-    run(8, "1d", "pipegcn-gf")
-    run(8, "1d", "vanilla")
-    run(8, "2d", "pipegcn")      # flattened ("a","b") axes = production layout
+    import json, sys
+    cells = json.loads(sys.argv[1])
+    for variant, agg, n_local, pipe_kw, axis_spec in cells:
+        run(variant, agg, n_local, pipe_kw, axis_spec,
+            steps=4 if pipe_kw.get("staleness_steps", 1) > 1 else 3)
     print("ALL-OK")
 """)
 
 
 @pytest.mark.slow
-def test_spmd_equals_sim_subprocess():
+def test_spmd_matrix_equals_sim_subprocess():
+    import json
+    cells = MATRIX + EXTRA
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)
-    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=560)
+    # ~250 s locally for the full matrix; generous headroom for slower CI.
+    proc = subprocess.run([sys.executable, "-c", SCRIPT, json.dumps(cells)],
+                          env=env, capture_output=True, text=True,
+                          timeout=1800)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ALL-OK" in proc.stdout
+    assert proc.stdout.count("OK ") == len(cells), proc.stdout

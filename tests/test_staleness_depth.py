@@ -110,6 +110,23 @@ def test_k1_queue_is_default_path(setup):
     assert bufs["feat"][0].ndim == 3      # no queue axis
 
 
+def test_kstep_convergence_smoke(tiny_pipeline):
+    """Tier-1: depth-2 staleness still trains (40-epoch smoke run); the
+    full k-sweep graceful-degradation comparison is `slow`."""
+    from repro.core import train_pipegcn
+    mc = ModelConfig(kind="sage", feat_dim=tiny_pipeline.dataset.feat_dim,
+                     hidden=32, num_layers=2,
+                     num_classes=tiny_pipeline.dataset.num_classes,
+                     dropout=0.0)
+    pc = dataclasses.replace(PipeConfig(stale=True), staleness_steps=2)
+    res = train_pipegcn(tiny_pipeline, mc, pc, epochs=40, lr=0.01,
+                        eval_every=40)
+    assert res.final_metrics["test"] > 0.8, res.final_metrics
+    hist = res.history["loss"]
+    assert hist[-1] < hist[0] * 0.5, hist
+
+
+@pytest.mark.slow
 def test_kstep_convergence_graceful():
     """Deeper staleness still trains; accuracy degrades gracefully in k."""
     from repro.core import train_pipegcn
