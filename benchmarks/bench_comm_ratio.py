@@ -1,19 +1,75 @@
-"""Paper Tab. 2 — communication ratio of vanilla partition-parallel training.
+"""Paper Tab. 2 — communication ratio of vanilla partition-parallel training,
+plus the per-step collective COUNT of the two communication schedules.
 
 Measured boundary bytes from the real partitioner on the simulated datasets,
 evaluated on the paper's hardware model. The paper reports 61–86 %; the
 reproduction should land in that band and grow with #partitions.
+
+The collective-count sweep traces the actual SPMD train step to a jaxpr and
+counts `all_to_all` eqns: the fused-deferred schedule must show exactly 2
+per training step (1 forward + 1 backward) against 2L-1 for the blocking
+per-layer schedule. The counts are asserted against the analytic math and
+recorded into the JSON trajectory artifact (BENCH_*.json) so CI pins them.
 """
 from __future__ import annotations
 
-from benchmarks.common import PAPER_GPU, emit, epoch_model
-from repro.core.config import ModelConfig
+import dataclasses
+
+from benchmarks.common import PAPER_GPU, emit, emit_meta, epoch_model
+from repro.core.config import ModelConfig, PipeConfig
 from repro.data import GraphDataPipeline
 from repro.graph.synthetic import model_template
 
 CASES = [("reddit-sim", 2), ("reddit-sim", 4),
          ("products-sim", 5), ("products-sim", 10),
          ("yelp-sim", 3), ("yelp-sim", 6)]
+
+
+def run_collective_counts(quick: bool = False):
+    """Traced per-step boundary-collective counts, fused vs per-layer.
+
+    Runs on a 1-device mesh hosting all partitions co-resident — the jaxpr
+    still contains every `all_to_all` the multi-device program would issue,
+    so the count is layout-independent.
+    """
+    from repro.core.pipegcn import PipeGCN
+    from repro.core.trace_utils import (expected_boundary_collectives,
+                                        traced_step_collectives)
+    from repro.launch.mesh import make_partition_mesh
+
+    P = 4
+    pipeline = GraphDataPipeline.build("tiny", P, kind="sage")
+    layer_counts = (2, 3) if quick else (2, 3, 4)
+    counts_meta = {}
+    for L in layer_counts:
+        mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                         hidden=16, num_layers=L,
+                         num_classes=pipeline.dataset.num_classes,
+                         dropout=0.0)
+        mesh = make_partition_mesh(P, parts_per_device=P)
+        for fuse in (False, True):
+            pc = dataclasses.replace(PipeConfig.named("pipegcn"),
+                                     fuse_exchange=fuse)
+            model = PipeGCN(mc, pc)
+            got = traced_step_collectives(mesh=mesh, model=model,
+                                          topo=pipeline.topo,
+                                          data=pipeline.train_data,
+                                          train=True)
+            want = expected_boundary_collectives(L, pc.fused, train=True)
+            assert got["all_to_all"] == want, (
+                f"collective-count regression: L={L} fuse={fuse} traced "
+                f"{got['all_to_all']} all_to_all, expected {want}")
+            # counts go to meta only — the records list is the timing
+            # trajectory (us_per_call), and a count is not a timing
+            sched = "fused" if fuse else "perlayer"
+            print(f"# collectives L{L}/{sched}: "
+                  f"all_to_all={got['all_to_all']} psum={got['psum']} "
+                  f"expected={want}", flush=True)
+            counts_meta[f"L{L}/{sched}"] = {
+                "all_to_all": got["all_to_all"], "psum": got["psum"],
+                "expected_all_to_all": want}
+    emit_meta("collective_counts", counts_meta)
+    return counts_meta
 
 
 def run(quick: bool = False):
@@ -37,6 +93,7 @@ def run(quick: bool = False):
         xs.sort()
         assert all(b >= a - 0.02 for (_, a), (_, b) in zip(xs, xs[1:])), (
             name, xs)
+    run_collective_counts(quick=quick)
     return rows
 
 

@@ -21,10 +21,8 @@ of the paper's measured 1.7-2.2x.
 from __future__ import annotations
 
 import dataclasses
-import sys
 import time
 
-import numpy as np
 
 from repro.core.config import ModelConfig
 from repro.graph.halo import PartitionedGraph
@@ -128,9 +126,32 @@ def epoch_model(pg: PartitionedGraph, mc: ModelConfig,
                       t_vanilla=t_vanilla, t_pipegcn=t_pipe)
 
 
+# Every emit() is also recorded here so benchmarks/run.py --json can write
+# the machine-readable trajectory artifact (BENCH_*.json in CI).
+RECORDS: list[dict] = []
+# Structured side-channel for non-timing facts (per-step collective counts,
+# schedule metadata) that belong in the JSON artifact but not the CSV rows.
+META: dict = {}
+
+
+def reset_records():
+    RECORDS.clear()
+    META.clear()
+
+
 def emit(name: str, us_per_call: float, derived: str):
     """CSV contract for benchmarks/run.py: name,us_per_call,derived."""
+    RECORDS.append({"name": name, "us_per_call": round(float(us_per_call), 2),
+                    "derived": derived})
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def emit_meta(key: str, value):
+    """Attach a structured entry to the JSON artifact (merged per key)."""
+    if isinstance(value, dict):
+        META.setdefault(key, {}).update(value)
+    else:
+        META[key] = value
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:

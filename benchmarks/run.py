@@ -18,6 +18,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: comm_ratio,throughput,accuracy,error,"
                          "gamma,scale,breakdown,rate,kernels,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the emitted rows + structured metadata "
+                         "(per-step collective counts) as a JSON artifact "
+                         "(the CI perf trajectory, BENCH_*.json)")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -38,20 +42,38 @@ def main() -> None:
         "kernels": bench_kernels.run,            # Pallas kernels
         "roofline": roofline.run,                # §Roofline from dry-run
     }
+    from benchmarks import common
+    common.reset_records()
     only = set(args.only.split(",")) if args.only else set(table)
+    unknown = only - set(table)
+    if unknown:
+        # A typo/rename in --only must not let the gate pass while running
+        # zero benchmarks (and uploading an empty artifact).
+        sys.exit(f"unknown bench name(s) {sorted(unknown)}; "
+                 f"have {sorted(table)}")
     failures = 0
+    durations = {}
     for name, fn in table.items():
         if name not in only:
             continue
         t0 = time.perf_counter()
         try:
             fn(quick=quick)
-            print(f"# bench {name}: done in {time.perf_counter() - t0:.1f}s",
-                  flush=True)
+            durations[name] = round(time.perf_counter() - t0, 1)
+            print(f"# bench {name}: done in {durations[name]}s", flush=True)
         except Exception:
             failures += 1
             print(f"# bench {name}: FAILED", flush=True)
             traceback.print_exc()
+    if args.json:
+        import json
+        payload = {"quick": quick, "benches": sorted(only),
+                   "durations_s": durations, "failures": failures,
+                   "records": common.RECORDS, "meta": common.META}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.RECORDS)} records)",
+              flush=True)
     if failures:
         sys.exit(1)
 

@@ -17,7 +17,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ModelConfig, PipeConfig
 from repro.core.pipegcn import PipeGCN

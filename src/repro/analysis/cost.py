@@ -11,7 +11,6 @@ All counts are GLOBAL per step; divide by chip count for per-device terms.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.models.config import ArchConfig, InputShape
 from repro.models.model import LM, decoder_layer_specs

@@ -71,7 +71,7 @@ def restore_checkpoint(ckpt_dir: str, step: int | None, like):
         raise ValueError(
             f"checkpoint has {manifest['num_leaves']} leaves, template has "
             f"{len(leaves_like)}")
-    import ml_dtypes
+    import ml_dtypes  # noqa: F401 — registers bf16 etc. with numpy
     out = []
     for i, tmpl in enumerate(leaves_like):
         arr = data[f"leaf_{i}"]

@@ -47,6 +47,19 @@ class PipeConfig:
     # consume boundary data from k iterations ago — k-1 extra iterations of
     # compute available to hide one exchange. k=1 is the paper's PipeGCN.
     staleness_steps: int = 1
+    # Fused deferred exchange: in stale mode the exchanged boundary payloads
+    # are only consumed at step t+1 (Alg. 1), so per-layer sends can be
+    # packed along the feature axis and shipped in ONE collective per
+    # direction (1 forward + 1 backward vs 2L-1 blocking per-layer
+    # collectives), scheduled off the critical path. Numerically identical
+    # to the per-layer schedule; no effect when stale=False (vanilla mode
+    # needs fresh per-layer exchanges on the critical path).
+    fuse_exchange: bool = True
+
+    @property
+    def fused(self) -> bool:
+        """Whether the step actually runs the fused-deferred schedule."""
+        return self.stale and self.fuse_exchange
 
     @staticmethod
     def vanilla() -> "PipeConfig":

@@ -29,6 +29,15 @@ Design notes
   dependence on current-iteration compute (the XLA scheduler can overlap
   them, which is the TPU-native analogue of the paper's second cudaStream).
 
+* Fused deferred exchange (``PipeConfig.fuse_exchange``, default on): in
+  stale mode no current-step compute consumes the exchange results, so the
+  per-layer sends are packed along the feature axis (static offset table,
+  see ``pack_offsets``) and shipped in ONE collective after the forward
+  plus ONE after the backward — 2 per step instead of 2L-1 — with the
+  unpacked results landing straight in the t+1 FIFOs/EMA buffers. Packing
+  commutes with the exchange (pure data movement), so the schedules are
+  bit-identical; vanilla mode keeps the blocking per-layer exchange.
+
 State layout (per layer ℓ = 1..L; widths follow the layer inputs):
   feat_buf[ℓ] : (P*slot, F_{ℓ-1})  stale boundary features   (Eq. 3 h^(t-1))
   grad_buf[ℓ] : (max_inner, F_{ℓ-1}) stale boundary-gradient contributions,
@@ -41,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -224,10 +233,63 @@ def flat_exchange_reference(S):
 
 
 # ----------------------------------------------------------------------
+# Fused deferred exchange: packing per-layer payloads into one collective.
+#
+# In stale mode the exchanged boundary data is consumed only at step t+1,
+# so the per-layer sends have no consumer inside the current step — they
+# can be concatenated along the feature axis (layer widths differ; the
+# offset table is static at trace time) and shipped in a single collective
+# per direction. The exchange is pure data movement, so packing commutes
+# with it exactly: fused and per-layer schedules are bit-identical.
+# ----------------------------------------------------------------------
+
+def pack_widths(payloads) -> tuple[int, ...]:
+    """Static per-layer feature widths of a payload list (the pack layout)."""
+    return tuple(int(p.shape[-1]) for p in payloads)
+
+
+def pack_offsets(widths) -> tuple[int, ...]:
+    """Static start offset of each layer's slice in the packed feature axis."""
+    out, off = [], 0
+    for w in widths:
+        out.append(off)
+        off += int(w)
+    return tuple(out)
+
+
+def pack_payloads(payloads):
+    """Per-layer (..., P, slot, F_l) sends -> one (..., P, slot, ΣF_l)."""
+    if len(payloads) == 1:
+        return payloads[0]
+    return jnp.concatenate(payloads, axis=-1)
+
+
+def unpack_payloads(packed, widths):
+    """Inverse of `pack_payloads` given the static width table."""
+    if len(widths) == 1:
+        return [packed]
+    offsets = pack_offsets(widths)
+    return [jax.lax.slice_in_dim(packed, o, o + w, axis=packed.ndim - 1)
+            for o, w in zip(offsets, widths)]
+
+
+# ----------------------------------------------------------------------
 # Backends: the four sync points.
 # ----------------------------------------------------------------------
 
-class SimBackend:
+class _ExchangeBase:
+    """Shared fused-exchange, layered on each backend's `exchange`."""
+
+    def fused_exchange(self, payloads):
+        """Exchange a list of per-layer (..., P, slot, F_l) payloads in ONE
+        collective: pack along the feature axis, exchange the packed buffer
+        once, unpack at the static offsets. Exactly equivalent to
+        [self.exchange(p) for p in payloads]."""
+        recv = self.exchange(pack_payloads(payloads))
+        return unpack_payloads(recv, pack_widths(payloads))
+
+
+class SimBackend(_ExchangeBase):
     """Partitions as leading axis on a single device."""
 
     is_spmd = False
@@ -252,7 +314,7 @@ class SimBackend:
         return keep.astype(jnp.float32) / (1.0 - rate)
 
 
-class SpmdBackend:
+class SpmdBackend(_ExchangeBase):
     """Runs inside shard_map over `axis_name` (a mesh axis or tuple of axes
     — the production mesh flattens ("data","model") into the partition
     axis). With `n_local` > 1 each device hosts n_local co-resident
@@ -373,6 +435,21 @@ class PipeGCN:
             grad.append(jnp.zeros(lead + (topo.max_inner, fin), dtype))
         return {"feat": tuple(feat), "grad": tuple(grad)}
 
+    # ---------------- pipeline-buffer semantics ----------------
+
+    def _consume_buffer(self, buf):
+        """The stale state a step reads: t-k (FIFO head) or t-1 (plain/EMA)."""
+        return buf[0] if self.pipe.staleness_steps > 1 else buf
+
+    def _update_buffer(self, buf, fresh, smooth: bool):
+        """Next-step buffer from the freshly exchanged payload: FIFO push,
+        EMA (γ·old + (1−γ)·fresh), or plain replacement."""
+        if self.pipe.staleness_steps > 1:
+            return jnp.concatenate([buf[1:], fresh[None]], axis=0)
+        if smooth:
+            return self.pipe.gamma * buf + (1 - self.pipe.gamma) * fresh
+        return fresh
+
     # ---------------- shared layer math ----------------
 
     @property
@@ -447,34 +524,40 @@ class PipeGCN:
             scatter = partial(_scatter_recv, max_inner=max_inner)
 
         h = data.x
+        fuse = pipe.fused        # stale + fuse_exchange: deferred collectives
         residuals = []
         new_feat = []
+        pending_feat = []        # fused mode: per-layer sends, exchanged once
+        feat_dtypes = []         # ... and their pre-compression dtypes
         dropout_rate = self.model.dropout if train else 0.0
 
         for ell in range(L):
             fin, fout = dims[ell]
             # -- boundary feature communication --------------------------------
             send = gather(h, send_idx, send_mask)       # (..., P, slot, fin)
+            send_dtype = send.dtype
             if pipe.compress_boundary:
                 send = send.astype(jnp.bfloat16)
-            fresh = backend.exchange(send)              # received boundary feats
-            if pipe.compress_boundary:
-                fresh = fresh.astype(h.dtype)
-            fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, fin))
-            if pipe.stale:
-                buf = buffers["feat"][ell]
-                if pipe.staleness_steps > 1:            # FIFO queue (depth k)
-                    halo = buf[0]                       # consume t-k state
-                    new_feat.append(
-                        jnp.concatenate([buf[1:], fresh[None]], axis=0))
-                else:
-                    halo = buf                          # consume t-1 state
-                    upd = (pipe.gamma * halo + (1 - pipe.gamma) * fresh
-                           if pipe.smooth_feat else fresh)
-                    new_feat.append(upd)
+            if fuse:
+                # Stale mode: the exchange result is consumed only at t+1,
+                # so defer the send into the packed buffer and read this
+                # step's halo straight from the pipeline state.
+                pending_feat.append(send)
+                feat_dtypes.append(send_dtype)
+                halo = self._consume_buffer(buffers["feat"][ell])
+                new_feat.append(None)   # filled after the fused exchange
             else:
-                halo = fresh
-                new_feat.append(buffers["feat"][ell])
+                fresh = backend.exchange(send)          # received boundary feats
+                if pipe.compress_boundary:
+                    fresh = fresh.astype(send_dtype)
+                fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, fin))
+                if pipe.stale:
+                    halo = self._consume_buffer(buffers["feat"][ell])
+                    new_feat.append(self._update_buffer(
+                        buffers["feat"][ell], fresh, pipe.smooth_feat))
+                else:
+                    halo = fresh
+                    new_feat.append(buffers["feat"][ell])
 
             if dropout_rate > 0.0:
                 dkey = jax.random.fold_in(key, ell)
@@ -497,6 +580,21 @@ class PipeGCN:
             residuals.append((comb, a, u, dm))
             h = jax.nn.relu(u) if ell < L - 1 else u
 
+        if fuse:
+            # ONE collective for all L layers' boundary features, issued
+            # after the last layer. Nothing downstream of it is consumed
+            # this step (results land in the t+1 buffers), so XLA is free
+            # to overlap it with the loss/backward/optimizer compute.
+            for ell, fresh in enumerate(backend.fused_exchange(pending_feat)):
+                # restore the layer's own pre-pack dtype: undoes the bf16
+                # wire compression AND any promotion from packing layers
+                # of different dtypes into one buffer
+                fresh = fresh.astype(feat_dtypes[ell])
+                fresh = fresh.reshape(
+                    fresh.shape[:-3] + (P * topo.slot, dims[ell][0]))
+                new_feat[ell] = self._update_buffer(
+                    buffers["feat"][ell], fresh, pipe.smooth_feat)
+
         logits = h
 
         # -- loss ---------------------------------------------------------
@@ -516,6 +614,7 @@ class PipeGCN:
         # -- manual backward (Alg. 1 lines 17–30) --------------------------
         grads = {}
         new_grad = [None] * L
+        pending_grad = []        # fused mode: (ell, db) per layer, one exchange
         j = dlogits
         for ell in reversed(range(L)):
             comb, a, u, dm = residuals[ell]
@@ -538,28 +637,41 @@ class PipeGCN:
                 dh_local, db = bwd(tslice, du, comb, dm)
             db = db.reshape(db.shape[:-2] + (P, topo.slot, dims[ell][0]))
             # -- boundary gradient communication ---------------------------
+            # dtype the per-layer schedule would hand to the scatter:
+            # decompressed to j.dtype, or the payload's own dtype
+            db_dtype = j.dtype if pipe.compress_boundary else db.dtype
             if pipe.compress_boundary:
                 db = db.astype(jnp.bfloat16)
-            db_recv = backend.exchange(db)
-            if pipe.compress_boundary:
-                db_recv = db_recv.astype(j.dtype)
-            fresh_contrib = scatter(db_recv, send_idx, send_mask)
-            if pipe.stale:
-                buf = buffers["grad"][ell]
-                if pipe.staleness_steps > 1:            # FIFO queue (depth k)
-                    contrib = buf[0]                    # consume t-k state
-                    new_grad[ell] = jnp.concatenate(
-                        [buf[1:], fresh_contrib[None]], axis=0)
-                else:
-                    contrib = buf                       # consume t-1 state
-                    upd = (pipe.gamma * contrib
-                           + (1 - pipe.gamma) * fresh_contrib
-                           if pipe.smooth_grad else fresh_contrib)
-                    new_grad[ell] = upd
+            if fuse:
+                # Deferred: the stale contribution comes from the t-1 (or
+                # t-k) buffer; the fresh send joins the packed buffer for
+                # the single post-backward collective.
+                pending_grad.append((ell, db, db_dtype))
+                contrib = self._consume_buffer(buffers["grad"][ell])
             else:
-                contrib = fresh_contrib
-                new_grad[ell] = buffers["grad"][ell]
+                db_recv = backend.exchange(db)
+                if pipe.compress_boundary:
+                    db_recv = db_recv.astype(j.dtype)
+                fresh_contrib = scatter(db_recv, send_idx, send_mask)
+                if pipe.stale:
+                    contrib = self._consume_buffer(buffers["grad"][ell])
+                    new_grad[ell] = self._update_buffer(
+                        buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+                else:
+                    contrib = fresh_contrib
+                    new_grad[ell] = buffers["grad"][ell]
             j = dh_local + contrib
+
+        if fuse and pending_grad:
+            # ONE collective for all L-1 boundary-gradient sends (layer 0
+            # sends nothing — Alg. 1 stops its backward at the first layer).
+            recvs = backend.fused_exchange([db for _, db, _ in pending_grad])
+            for (ell, _, db_dtype), db_recv in zip(pending_grad, recvs):
+                # restore this layer's pre-pack dtype (see forward unpack)
+                db_recv = db_recv.astype(db_dtype)
+                fresh_contrib = scatter(db_recv, send_idx, send_mask)
+                new_grad[ell] = self._update_buffer(
+                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
 
         new_buffers = {"feat": tuple(new_feat), "grad": tuple(new_grad)}
         return loss, logits, grads, new_buffers

@@ -1,0 +1,84 @@
+"""Jaxpr-level collective accounting for the PipeGCN step.
+
+The fused deferred exchange collapses the per-step boundary collectives from
+2L-1 blocking per-layer calls (L forward feature exchanges + L-1 backward
+gradient exchanges) to exactly 2 (one packed exchange per direction). These
+helpers trace a step function and count primitives in the jaxpr — the
+regression test and the benchmark trajectory both pin the counts so the
+fusion can never silently regress.
+
+Counting happens at the jaxpr level (before XLA optimization), so it works
+on any backend and any device count — an `all_to_all` over a 1-device mesh
+axis is still one `all_to_all` eqn in the trace.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _iter_subjaxprs(v):
+    """Yield every jaxpr reachable from an eqn-param value (jaxpr,
+    ClosedJaxpr, or nested lists/tuples of either — covers shard_map,
+    pjit, custom_vjp, scan and cond params)."""
+    if hasattr(v, "eqns"):
+        yield v
+    elif hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+        yield v.jaxpr
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _iter_subjaxprs(x)
+
+
+def count_primitives(jaxpr, names) -> dict[str, int]:
+    """Occurrences of each primitive name anywhere in `jaxpr` (recursing
+    into nested jaxprs). Accepts a ClosedJaxpr or a raw jaxpr."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    counts = dict.fromkeys(names, 0)
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in counts:
+                counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for sub in _iter_subjaxprs(v):
+                    walk(sub)
+
+    walk(jaxpr)
+    return counts
+
+
+def collective_counts(fn, *args) -> dict[str, int]:
+    """Trace `fn(*args)` and count the inter-device collectives in its
+    jaxpr: boundary exchanges (`all_to_all`) and reductions (`psum`)."""
+    jx = jax.make_jaxpr(fn)(*args)
+    return count_primitives(jx, ("all_to_all", "psum"))
+
+
+def expected_boundary_collectives(num_layers: int, fused: bool,
+                                  train: bool = True) -> int:
+    """The collective-count math of the two communication schedules.
+
+    Per-layer (blocking): L forward feature exchanges + (L-1) backward
+    gradient exchanges = 2L-1 per training step (L at eval).
+    Fused-deferred (stale mode): 1 packed forward + 1 packed backward = 2
+    per training step (1 at eval); a 1-layer model has no gradient sends,
+    so its backward collective vanishes in both schedules.
+    """
+    L = num_layers
+    if fused:
+        fwd, bwd = 1, (1 if L > 1 else 0)
+    else:
+        fwd, bwd = L, L - 1
+    return fwd + (bwd if train else 0)
+
+
+def traced_step_collectives(model, mesh, topo, data, axis_name="parts",
+                            train: bool = True) -> dict[str, int]:
+    """Collective counts of a traced `PipeGCN.make_spmd_step` jaxpr, with
+    freshly initialized params/buffers as example arguments."""
+    step = model.make_spmd_step(mesh, topo, axis_name, train=train)
+    params = model.init_params(jax.random.PRNGKey(0))
+    buffers = model.init_buffers(topo)
+    return collective_counts(step, topo, params, buffers, data,
+                             jax.random.PRNGKey(0))

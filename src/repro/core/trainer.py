@@ -10,11 +10,9 @@ import time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.config import ModelConfig, PipeConfig
-from repro.core.pipegcn import PipeGCN, ShardedData, Topology
+from repro.core.pipegcn import PipeGCN, Topology
 from repro.optim import Optimizer, adam
 
 
@@ -74,6 +72,16 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
     # Fail fast (before tracing) if the selected aggregation engine needs
     # Topology fields the pipeline was not built with.
     model._agg_slice(topo)
+    if log:
+        from repro.core.trace_utils import expected_boundary_collectives
+        n_coll = expected_boundary_collectives(model_cfg.num_layers,
+                                               pipe_cfg.fused, train=True)
+        sched = "fused-deferred" if pipe_cfg.fused else "per-layer"
+        where = (f"{n_coll} boundary collectives/train step"
+                 if mesh is not None else
+                 f"{n_coll} boundary exchanges/train step, local on the "
+                 "sim backend")
+        log(f"comm schedule: {sched} ({where}, L={model_cfg.num_layers})")
     params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)

@@ -9,7 +9,6 @@ same model/optimizer hyper-parameter template.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import numpy as np
 

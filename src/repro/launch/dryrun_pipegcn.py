@@ -63,7 +63,8 @@ def synthetic_topology_sds(mesh, sizes) -> tuple:
 
 
 def dryrun_pipegcn(multi_pod: bool, variant: str = "pipegcn",
-                   sizes=None, compress: bool = False) -> dict:
+                   sizes=None, compress: bool = False,
+                   fuse: bool = True) -> dict:
     import dataclasses
     mesh = make_production_mesh(multi_pod=multi_pod)
     sizes = sizes or (SMALL if multi_pod else PROD)
@@ -75,7 +76,8 @@ def dryrun_pipegcn(multi_pod: bool, variant: str = "pipegcn",
                      hidden=sizes["hidden"], num_layers=sizes["num_layers"],
                      num_classes=sizes["num_classes"], dropout=0.0)
     pc = dataclasses.replace(PipeConfig.named(variant),
-                             compress_boundary=compress)
+                             compress_boundary=compress,
+                             fuse_exchange=fuse)
     model = PipeGCN(mc, pc)
     params_sds = jax.eval_shape(
         lambda: model.init_params(jax.random.PRNGKey(0)))
@@ -98,7 +100,17 @@ def dryrun_pipegcn(multi_pod: bool, variant: str = "pipegcn",
     compiled = lowered.compile()
 
     result = {"arch": f"pipegcn-{variant}", "multi_pod": multi_pod,
-              "compress": compress, "chips": n, "sizes": sizes}
+              "compress": compress, "fuse_exchange": pc.fuse_exchange,
+              "chips": n, "sizes": sizes}
+    # per-step boundary-collective count: jaxpr-traced (schedule truth) +
+    # the analytic 2 (fused) vs 2L-1 (per-layer) expectation
+    from repro.core.trace_utils import (collective_counts,
+                                        expected_boundary_collectives)
+    counts = collective_counts(step, topo_sds, params_sds, bufs_sds,
+                               data_sds, key_sds)
+    result["boundary_collectives_per_step"] = counts["all_to_all"]
+    result["boundary_collectives_expected"] = expected_boundary_collectives(
+        mc.num_layers, pc.fused, train=True)
     mem = compiled.memory_analysis()
     if mem is not None:
         result["bytes_per_device"] = int(
@@ -139,6 +151,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--variant", default="pipegcn")
     ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="per-layer blocking exchange (2L-1 collectives) "
+                         "instead of the fused-deferred schedule (2)")
     ap.add_argument("--both", action="store_true",
                     help="also run the vanilla baseline for comparison")
     ap.add_argument("--out", default=None)
@@ -146,10 +161,12 @@ def main():
     variants = [args.variant] + (["vanilla"] if args.both else [])
     results = []
     for v in variants:
-        r = dryrun_pipegcn(args.multi_pod, v, compress=args.compress)
+        r = dryrun_pipegcn(args.multi_pod, v, compress=args.compress,
+                           fuse=not args.no_fuse)
         results.append(r)
         print(f"[pipegcn dryrun OK] variant={v} chips={r['chips']} "
               f"bottleneck={r['bottleneck']} "
+              f"boundary_colls={r['boundary_collectives_per_step']} "
               f"coll={r['collective_total_bytes']:,}B", flush=True)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.core import ModelConfig, PipeConfig, train_pipegcn
@@ -48,7 +47,9 @@ def run_gcn(args) -> dict:
                      dropout=tpl["dropout"],
                      multilabel=pipeline.dataset.multilabel,
                      agg=args.agg)
-    pc = PipeConfig.named(args.variant, gamma=args.gamma)
+    import dataclasses
+    pc = dataclasses.replace(PipeConfig.named(args.variant, gamma=args.gamma),
+                             fuse_exchange=not args.no_fuse_exchange)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
                         eval_every=args.eval_every, log=print, mesh=mesh)
@@ -57,6 +58,7 @@ def run_gcn(args) -> dict:
            "spmd": bool(args.spmd),
            "parts_per_device": args.parts_per_device,
            "agg": args.agg,
+           "fuse_exchange": pc.fuse_exchange,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
     if args.ckpt_dir:
@@ -131,6 +133,10 @@ def main():
                     help="co-resident partitions per device for --spmd "
                          "(partitions must be a multiple; mesh size = "
                          "partitions // parts_per_device)")
+    ap.add_argument("--no-fuse-exchange", action="store_true",
+                    help="revert stale variants to the blocking per-layer "
+                         "boundary exchange (2L-1 collectives/step instead "
+                         "of the fused-deferred 2)")
     ap.add_argument("--gamma", type=float, default=0.95)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--eval-every", type=int, default=20)

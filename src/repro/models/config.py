@@ -6,7 +6,6 @@ citations) live in ``repro/configs/<id>.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

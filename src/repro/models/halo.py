@@ -25,13 +25,10 @@ The halo buffer is pipeline state threaded through the train step, like
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as PS
 
 from repro.models.layers import apply_rope
 

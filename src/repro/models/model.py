@@ -14,12 +14,10 @@ Three entry points per model:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models import attention as attn

@@ -8,8 +8,54 @@ os.environ.pop("XLA_FLAGS", None) if "force_host_platform" in \
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
+
+_PYPROJECT = os.path.join(os.path.dirname(__file__), "..", "pyproject.toml")
+
+
+def _hypothesis_pin() -> dict:
+    """The pinned profile from pyproject [tool.repro.hypothesis] (fixed
+    seed / no deadline so tier-1 is deterministic in CI). tomllib is
+    3.11+; fall back to a minimal key=value scan of that one section."""
+    try:
+        import tomllib
+        with open(_PYPROJECT, "rb") as f:
+            return tomllib.load(f)["tool"]["repro"]["hypothesis"]
+    except Exception:
+        pass
+    out, in_section = {}, False
+    try:
+        with open(_PYPROJECT) as f:
+            for line in f:
+                line = line.split("#", 1)[0].strip()
+                if line.startswith("["):
+                    in_section = line == "[tool.repro.hypothesis]"
+                elif in_section and "=" in line:
+                    k, v = (s.strip() for s in line.split("=", 1))
+                    out[k] = {"true": True, "false": False}.get(
+                        v, int(v) if v.isdigit() else v)
+    except OSError:
+        pass
+    return out
+
+
+def _pin_hypothesis_profile():
+    try:
+        from hypothesis import settings
+    except ImportError:
+        return   # tests fall back to the fixed-seed sweep shim
+    pin = _hypothesis_pin()
+    deadline = pin.get("deadline_ms", 0) or None
+    kw = dict(derandomize=bool(pin.get("derandomize", True)),
+              deadline=deadline,
+              max_examples=int(pin.get("max_examples", 50)))
+    if not pin.get("database", False):
+        kw["database"] = None
+    settings.register_profile("repro-ci", **kw)
+    settings.load_profile("repro-ci")
+
+
+_pin_hypothesis_profile()
 
 
 @pytest.fixture(scope="session")

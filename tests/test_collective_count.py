@@ -1,0 +1,121 @@
+"""Collective-count regression gate for the fused deferred exchange.
+
+Traces `PipeGCN.make_spmd_step` to a jaxpr and counts `all_to_all` eqns:
+with `fuse_exchange=True` a stale-mode training step must contain exactly
+1 boundary collective in the forward and 1 in the backward (2 total),
+against L forward + (L-1) backward = 2L-1 for the blocking per-layer
+schedule. If a future change reintroduces a per-layer exchange, these
+counts move and the test fails — the fusion cannot silently regress.
+
+The trace runs on a 1-device mesh hosting all P partitions co-resident
+(`parts_per_device=P`): the jaxpr still contains every `all_to_all` the
+multi-device program would issue, so no forced host devices are needed
+and this stays in tier-1.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN
+from repro.core.trace_utils import (expected_boundary_collectives,
+                                    traced_step_collectives)
+from repro.launch.mesh import make_partition_mesh
+
+P = 4
+
+
+def _model(pipeline, num_layers, **pipe_kw):
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=16, num_layers=num_layers,
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return PipeGCN(mc, pc)
+
+
+def _counts(pipeline, model, train):
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    return traced_step_collectives(model, mesh, pipeline.topo,
+                                   pipeline.train_data, train=train)
+
+
+@pytest.mark.parametrize("num_layers", [2, 3, 4])
+def test_fused_train_step_has_exactly_two_collectives(tiny_pipeline,
+                                                      num_layers):
+    model = _model(tiny_pipeline, num_layers, fuse_exchange=True)
+    got = _counts(tiny_pipeline, model, train=True)
+    assert got["all_to_all"] == 2, got           # 1 forward + 1 backward
+
+
+@pytest.mark.parametrize("num_layers", [2, 3, 4])
+def test_perlayer_train_step_has_2L_minus_1(tiny_pipeline, num_layers):
+    model = _model(tiny_pipeline, num_layers, fuse_exchange=False)
+    got = _counts(tiny_pipeline, model, train=True)
+    assert got["all_to_all"] == 2 * num_layers - 1, got
+
+
+@pytest.mark.parametrize("fuse,expect", [(True, 1), (False, 3)])
+def test_forward_only_collective_split(tiny_pipeline, fuse, expect):
+    """train=False isolates the forward: 1 fused vs L per-layer exchanges —
+    together with the train counts this pins 1 forward + 1 backward."""
+    model = _model(tiny_pipeline, 3, fuse_exchange=fuse)
+    got = _counts(tiny_pipeline, model, train=False)
+    assert got["all_to_all"] == expect, got
+
+
+def test_vanilla_ignores_fuse_flag(tiny_pipeline):
+    """Non-stale mode needs fresh per-layer exchanges on the critical path;
+    the fuse flag must not change its schedule (or its semantics)."""
+    model = _model(tiny_pipeline, 3, fuse_exchange=True, stale=False)
+    got = _counts(tiny_pipeline, model, train=True)
+    assert got["all_to_all"] == 5, got
+
+
+@pytest.mark.parametrize("pipe_kw", [
+    {"staleness_steps": 3},
+    {"compress_boundary": True},
+    {"smooth_feat": True, "smooth_grad": True},
+])
+def test_fusion_survives_pipeline_variants(tiny_pipeline, pipe_kw):
+    """k-step FIFOs, bf16 compression and γ-smoothing all ride the same
+    two fused collectives."""
+    model = _model(tiny_pipeline, 3, fuse_exchange=True, **pipe_kw)
+    got = _counts(tiny_pipeline, model, train=True)
+    assert got["all_to_all"] == 2, (pipe_kw, got)
+
+
+def test_expected_collectives_math():
+    """The analytic table the README documents."""
+    for L in (1, 2, 3, 4, 8):
+        assert expected_boundary_collectives(L, fused=False) == 2 * L - 1
+        assert expected_boundary_collectives(
+            L, fused=True) == (2 if L > 1 else 1)
+        assert expected_boundary_collectives(
+            L, fused=False, train=False) == L
+        assert expected_boundary_collectives(L, fused=True, train=False) == 1
+
+
+def test_single_layer_fused_has_no_backward_collective(tiny_pipeline):
+    """L=1: Alg. 1 sends no boundary gradients, so the fused backward
+    exchange must vanish entirely (not ship an empty payload)."""
+    model = _model(tiny_pipeline, 1, fuse_exchange=True)
+    got = _counts(tiny_pipeline, model, train=True)
+    assert got["all_to_all"] == 1, got
+
+
+def test_count_primitives_sees_through_jit():
+    """The counter recurses into pjit/closed-call sub-jaxprs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.trace_utils import count_primitives
+
+    @jax.jit
+    def inner(x):
+        return jnp.sin(x) + jnp.sin(2 * x)
+
+    def outer(x):
+        return inner(x) * jnp.sin(x)
+
+    jx = jax.make_jaxpr(outer)(1.0)
+    assert count_primitives(jx, ("sin",))["sin"] == 3

@@ -5,7 +5,6 @@ not degraded beyond the paper's observed band.
 Tier split: the full 120-epoch three-variant comparison is `slow` (it
 dominates tier-1 wall time); tier-1 keeps a 40-epoch smoke run that still
 asserts learning + near-perfect accuracy on the tiny community graph."""
-import numpy as np
 import pytest
 
 from repro.core import ModelConfig, PipeConfig, train_pipegcn

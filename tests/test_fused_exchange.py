@@ -1,0 +1,165 @@
+"""Fused deferred exchange vs the blocking per-layer reference, sim backend.
+
+`fuse_exchange=True` packs all per-layer boundary sends into one collective
+per direction; the exchange is pure data movement, so the two schedules
+must agree bit-for-bit. This tier-1 matrix pins 1e-12 float64 parity for
+loss, every weight gradient, and every pipeline buffer over multiple steps
+across variants × aggregation engines × pipeline knobs; the cross-backend
+(shard_map) cells live in the slow-tier subprocess matrix in
+test_pipegcn_spmd.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import (PipeGCN, pack_offsets, pack_payloads,
+                                pack_widths, shard_data, topology_from,
+                                unpack_payloads)
+from repro.graph import build_partitioned_graph, make_dataset, partition_graph
+from repro.graph.csr import mean_normalized
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("tiny")
+    prop = mean_normalized(ds.graph)
+    pg = build_partitioned_graph(prop, partition_graph(ds.graph, P, seed=0), P)
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+    return ds, topo, data
+
+
+CELLS = [
+    ("pipegcn", "coo", {}),
+    ("pipegcn", "blocksparse", {}),
+    ("pipegcn-g", "coo", {}),
+    ("pipegcn-f", "coo", {}),
+    ("pipegcn-gf", "blocksparse", {}),
+    ("pipegcn", "coo", {"staleness_steps": 3}),
+    ("pipegcn", "blocksparse", {"staleness_steps": 2}),
+    ("pipegcn", "coo", {"compress_boundary": True}),
+    ("pipegcn-gf", "coo", {"compress_boundary": True}),
+    ("pipegcn", "coo", {"staleness_steps": 2, "compress_boundary": True}),
+]
+
+
+@pytest.mark.parametrize("variant,agg,pipe_kw", CELLS)
+def test_fused_equals_perlayer(setup, variant, agg, pipe_kw):
+    ds, topo, data = setup
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes,
+                     dropout=0.0, agg=agg)
+    base = dataclasses.replace(PipeConfig.named(variant, gamma=0.9), **pipe_kw)
+    ref = PipeGCN(mc, dataclasses.replace(base, fuse_exchange=False))
+    fus = PipeGCN(mc, dataclasses.replace(base, fuse_exchange=True))
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_fus = fus.init_buffers(topo, dtype=jnp.float64)
+    steps = 5 if pipe_kw.get("staleness_steps", 1) > 1 else 3
+    for t in range(steps):
+        key = jax.random.PRNGKey(t)
+        l0, g0, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_fus, _ = fus.train_step(topo, params, b_fus, data, key)
+        assert abs(float(l0) - float(l1)) < 1e-12, (variant, agg, pipe_kw, t)
+        for k in g0:
+            d = float(jnp.abs(g0[k] - g1[k]).max())
+            assert d < 1e-12, (variant, agg, pipe_kw, t, k, d)
+        for a, b in zip(jax.tree.leaves(b_ref), jax.tree.leaves(b_fus)):
+            d = float(jnp.abs(a - b).max())
+            assert d < 1e-12, (variant, agg, pipe_kw, t, d)
+
+
+def test_fused_with_dropout(setup):
+    """Dropout masks are drawn identically under both schedules (the mask
+    key never touches the exchange), so parity holds with training noise."""
+    ds, topo, data = setup
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes, dropout=0.5)
+    base = PipeConfig.named("pipegcn")
+    ref = PipeGCN(mc, dataclasses.replace(base, fuse_exchange=False))
+    fus = PipeGCN(mc, dataclasses.replace(base, fuse_exchange=True))
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_fus = fus.init_buffers(topo, dtype=jnp.float64)
+    for t in range(3):
+        key = jax.random.PRNGKey(100 + t)
+        l0, g0, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_fus, _ = fus.train_step(topo, params, b_fus, data, key)
+        assert abs(float(l0) - float(l1)) < 1e-12
+        for k in g0:
+            assert float(jnp.abs(g0[k] - g1[k]).max()) < 1e-12, (t, k)
+
+
+def test_vanilla_unaffected_by_fuse_flag(setup):
+    """stale=False keeps the blocking per-layer schedule regardless of the
+    flag — fresh boundary features are on the critical path."""
+    ds, topo, data = setup
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=2, num_classes=ds.num_classes, dropout=0.0)
+    a = PipeGCN(mc, dataclasses.replace(PipeConfig.vanilla(),
+                                        fuse_exchange=True))
+    b = PipeGCN(mc, dataclasses.replace(PipeConfig.vanilla(),
+                                        fuse_exchange=False))
+    assert not a.pipe.fused and not b.pipe.fused
+    params = a.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = a.init_buffers(topo, dtype=jnp.float64)
+    l0, g0, _, _ = a.train_step(topo, params, bufs, data, jax.random.PRNGKey(1))
+    l1, g1, _, _ = b.train_step(topo, params, bufs, data, jax.random.PRNGKey(1))
+    assert float(l0) == float(l1)
+    for k in g0:
+        assert float(jnp.abs(g0[k] - g1[k]).max()) == 0.0
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_fused_mixed_dtype_parity(setup, compress):
+    """f32 inputs with f64 params promote activations layer by layer, so
+    each layer's boundary payload has its own dtype. The fused unpack must
+    restore every layer's per-layer-schedule dtype (packing would otherwise
+    promote the whole buffer), keeping values AND buffer dtypes identical
+    between schedules."""
+    ds, topo, data = setup
+    data = data._replace(x=data.x.astype(jnp.float32))
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes, dropout=0.0)
+    base = dataclasses.replace(PipeConfig.named("pipegcn"),
+                               compress_boundary=compress)
+    ref = PipeGCN(mc, dataclasses.replace(base, fuse_exchange=False))
+    fus = PipeGCN(mc, dataclasses.replace(base, fuse_exchange=True))
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_fus = fus.init_buffers(topo, dtype=jnp.float64)
+    for t in range(3):
+        key = jax.random.PRNGKey(t)
+        l0, g0, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_fus, _ = fus.train_step(topo, params, b_fus, data, key)
+        assert float(l0) == float(l1), (compress, t)
+        for k in g0:
+            assert float(jnp.abs(g0[k] - g1[k]).max()) == 0.0, (compress, t, k)
+        for a, b in zip(jax.tree.leaves(b_ref), jax.tree.leaves(b_fus)):
+            assert a.dtype == b.dtype, (compress, t, a.dtype, b.dtype)
+            assert float(jnp.abs(a - b).max()) == 0.0, (compress, t)
+
+
+def test_pack_unpack_roundtrip():
+    """pack/unpack are exact inverses and the offset table is static."""
+    key = jax.random.PRNGKey(0)
+    widths = (7, 16, 3, 1)
+    payloads = [jax.random.normal(jax.random.fold_in(key, i), (2, P, 5, w))
+                for i, w in enumerate(widths)]
+    assert pack_widths(payloads) == widths
+    assert pack_offsets(widths) == (0, 7, 23, 26)
+    packed = pack_payloads(payloads)
+    assert packed.shape == (2, P, 5, sum(widths))
+    for orig, back in zip(payloads, unpack_payloads(packed, widths)):
+        assert jnp.array_equal(orig, back)

@@ -3,7 +3,6 @@
 Property sweeps use hypothesis when installed, else the deterministic
 fixed-seed fallback in _hypothesis_compat."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.graph import (build_partitioned_graph, coo_to_csr, make_dataset,

@@ -1,10 +1,8 @@
 """Pallas kernels vs pure-jnp oracles: property sweeps over shapes, dtypes,
 densities, and masking modes (interpret mode on CPU). Sweeps use hypothesis
 when installed, else the deterministic fallback in _hypothesis_compat."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops

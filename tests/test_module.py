@@ -1,6 +1,5 @@
 """Composable custom_vjp wrapper: jax.grad path == hand-written backward."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ModelConfig, PipeConfig, make_pipegcn_loss

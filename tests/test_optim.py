@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.data import TokenStream, synthetic_token_batches
+from repro.data import synthetic_token_batches
 from repro.optim import (adam, adamw, clip_by_global_norm, cosine_schedule,
                          constant_schedule, global_norm, linear_warmup_cosine,
                          sgd)

@@ -7,10 +7,16 @@ parameterized matrix:
 
 plus coverage cells the matrix alone misses: bf16 boundary compression and
 k-step staleness FIFOs under the SPMD backend (both previously exercised
-only by the sim tests), and the production flattened-2D-axes layout.
+only by the sim tests), the production flattened-2D-axes layout, and the
+fused-deferred exchange (fuse_exchange × {agg, n_local, compression,
+staleness-depth, smoothing}).
 
 Every cell asserts 1e-12 float64 parity vs the sim backend for the loss,
-every weight gradient, and every pipeline buffer, over >=3 steps. The whole
+every weight gradient, and every pipeline buffer, over >=3 steps. The sim
+reference ALWAYS runs the blocking per-layer schedule (fuse_exchange=False),
+while the SPMD side runs the cell's schedule (fused by default) — so every
+stale cell is simultaneously a cross-backend and a fused-vs-unfused parity
+check. The whole
 matrix runs in ONE subprocess so it alone sees 8 forced host devices; the
 rest of the suite keeps the single real device. One dataset/partitioning is
 built per process and the Topology carries tile streams alongside the COO
@@ -44,6 +50,21 @@ EXTRA = [
     # hierarchical n_local>1 exchange
     ("pipegcn", "coo", 1, {}, "2d"),
     ("pipegcn", "coo", 2, {}, "2d"),
+    # fused-deferred exchange parity matrix (tentpole): explicit
+    # fuse_exchange cells against the always-unfused sim reference, crossed
+    # with agg engine, n_local, bf16 compression, staleness depth and
+    # γ-smoothing; plus one unfused-SPMD cell so the per-layer schedule
+    # itself stays covered under shard_map.
+    ("pipegcn", "coo", 2, {"fuse_exchange": False}, "1d"),
+    ("pipegcn", "coo", 1, {"fuse_exchange": True}, "1d"),
+    ("pipegcn", "blocksparse", 4, {"fuse_exchange": True}, "1d"),
+    ("pipegcn-gf", "coo", 2,
+     {"fuse_exchange": True, "compress_boundary": True}, "1d"),
+    ("pipegcn-g", "blocksparse", 2, {"fuse_exchange": True}, "1d"),
+    ("pipegcn-f", "coo", 4, {"fuse_exchange": True}, "1d"),
+    ("pipegcn", "coo", 2,
+     {"fuse_exchange": True, "staleness_steps": 3}, "1d"),
+    ("pipegcn", "coo", 2, {"fuse_exchange": True}, "2d"),
 ]
 
 SCRIPT = textwrap.dedent("""
@@ -79,6 +100,10 @@ SCRIPT = textwrap.dedent("""
                          dropout=0.0, agg=agg)
         pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.9),
                                  **pipe_kw)
+        # The sim reference always runs the blocking per-layer schedule;
+        # the SPMD model runs the cell's (fused by default). The schedules
+        # are bit-identical by construction, so parity must stay 1e-12.
+        ref = PipeGCN(mc, dataclasses.replace(pc, fuse_exchange=False))
         model = PipeGCN(mc, pc)
         params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
         b_sim = model.init_buffers(topo, dtype=jnp.float64)
@@ -95,7 +120,7 @@ SCRIPT = textwrap.dedent("""
         cell = (variant, agg, f"nl{n_local}", axis_spec, pipe_kw)
         for t in range(steps):
             key = jax.random.PRNGKey(t)
-            l1, g1, b_sim, _ = model.train_step(topo, params, b_sim, data, key)
+            l1, g1, b_sim, _ = ref.train_step(topo, params, b_sim, data, key)
             l2, _, g2, b_spmd = step(topo, params, b_spmd, data, key)
             assert abs(float(l1) - float(l2)) < 1e-12, ("loss", cell, t)
             for k in g1:
