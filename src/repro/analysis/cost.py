@@ -1,4 +1,6 @@
-"""Analytic FLOP / HBM-byte model for the assigned architectures.
+"""Analytic FLOP / HBM-byte models: the assigned LM architectures, plus the
+PipeGCN layer matmul-ordering model (aggregate-first vs transform-first —
+see the GCN section at the bottom).
 
 XLA's `compiled.cost_analysis()` counts `while` (lax.scan) bodies ONCE, so
 its totals under-count layer-stacked models by ~L× (verified in
@@ -175,3 +177,133 @@ def _cache_bytes(cfg: ArchConfig, batch: int, length: int) -> float:
             total += 2 * batch * mem * cfg.num_kv_heads \
                 * cfg.resolved_head_dim * 2
     return total
+
+
+# ----------------------------------------------------------------------
+# PipeGCN layer matmul ordering (Demirci et al., "Scalable GCN Training on
+# Distributed-Memory Systems"): the Eq. 3/4 layer pair P·H·W can contract
+# in two orders —
+#
+#   aggregate-first  z = P·H   (sparse, 2·e·F_in)  then  u = z·W
+#   transform-first  hw = H·W  (dense)             then  u = P·hw (2·e·F_out)
+#
+# with e = effective sparse multiply-adds of the local propagation shard
+# per feature column: the padded COO length for the "coo" engine, or
+# n_tiles·T² = tile_density·(row_blocks·col_blocks)·T² for the block-sparse
+# engines (padded tiles do real MXU work). The same knob applies transposed
+# in the manual backward. FLOPs below are exact for the matmul terms
+# (multiply-adds ×2, per partition, fwd + bwd of ONE layer); HBM bytes are
+# the major operand reads/writes — an explicit approximation, matching the
+# style of the LM model above.
+# ----------------------------------------------------------------------
+
+import dataclasses
+
+GCN_ORDERS = ("aggregate-first", "transform-first")
+_TILE = 128       # adjacency tile edge (repro.kernels.gcn_spmm.TILE)
+
+
+@dataclasses.dataclass(frozen=True)
+class GcnLayerCost:
+    """FLOPs + approximate HBM traffic of one layer under one ordering."""
+
+    flops: float
+    hbm_bytes: float
+
+
+def gcn_layer_order_cost(order: str, fin: int, fout: int, num_rows: int,
+                         combined: int, nnz_eff: float,
+                         first_layer: bool = False, train: bool = True,
+                         fused: bool = False, tile: int = _TILE,
+                         dtype_bytes: int = 4) -> GcnLayerCost:
+    """Cost of one GCN layer (fwd + manual bwd) under `order`.
+
+    num_rows: inner (output) rows n; combined: [inner; halo] rows c of the
+    aggregation input; nnz_eff: effective sparse multiply-adds per feature
+    column. `first_layer`: Alg. 1 stops the backward at layer 0 —
+    aggregate-first then skips its backward SpMM entirely, while
+    transform-first still needs Pᵀ·du for the weight gradient
+    (gw = combᵀ·(Pᵀ·du)). `fused` (aggregate-first only): the fused kernels
+    skip the HBM round-trips of the (rows, F_in) intermediates (z re-read
+    fwd; dz write+read bwd) but the backward prologue recomputes du@wᵀ once
+    per TILE-row tile slot instead of once per row block — e/tile
+    transformed rows instead of n.
+    """
+    if order not in GCN_ORDERS:
+        raise ValueError(f"unknown order {order!r}; have {GCN_ORDERS}")
+    n, c, e = float(num_rows), float(combined), float(nnz_eff)
+    spmm_in, spmm_out = 2.0 * e * fin, 2.0 * e * fout
+    if order == "aggregate-first":
+        # fwd: z = P·comb (spmm_in), u = z@w.
+        # bwd: gw = zᵀ·du; dz = du@wᵀ; dcomb = Pᵀ·dz (spmm_in).
+        flops = spmm_in + 2.0 * n * fin * fout
+        bytes_ = (c * fin                          # read comb
+                  + e                              # tile/edge values
+                  + n * fin                        # write z (residual)
+                  + (0.0 if fused else n * fin)    # re-read z for the matmul
+                  + fin * fout + n * fout)         # weight + write u
+        if train:
+            flops += 2.0 * n * fin * fout          # gw
+            bytes_ += n * fout + n * fin + fin * fout      # du, z, gw
+            if not first_layer:
+                # dz rows: per row block once (unfused) vs per tile slot
+                # (fused prologue recompute, e/tile rows total)
+                dz_rows = (e / tile) if fused else n
+                flops += 2.0 * dz_rows * fin * fout + spmm_in
+                bytes_ += (fin * fout                          # w for dz
+                           + (0.0 if fused else 2.0 * n * fin)  # dz rt
+                           + e + c * fin)                      # tiles+dcomb
+        return GcnLayerCost(flops=flops, hbm_bytes=bytes_ * dtype_bytes)
+    # transform-first (always composed: dense matmul + SpMM over F_out)
+    # fwd: hw = comb@w, u = P·hw.
+    # bwd: dhw = Pᵀ·du (always — gw = combᵀ·dhw needs it); dcomb = dhw@wᵀ.
+    flops = 2.0 * c * fin * fout + spmm_out
+    bytes_ = (c * fin + fin * fout             # read comb + w
+              + 2.0 * c * fout                 # hw write + read
+              + e + n * fout)                  # tiles + write u
+    if train:
+        flops += spmm_out + 2.0 * c * fin * fout           # dhw, gw
+        bytes_ += (n * fout + e + 2.0 * c * fout           # du, tiles, dhw
+                   + c * fin + fin * fout)                 # comb + gw
+        if not first_layer:
+            flops += 2.0 * c * fin * fout                  # dcomb = dhw@wᵀ
+            bytes_ += fin * fout + c * fin                 # w + write dcomb
+    return GcnLayerCost(flops=flops, hbm_bytes=bytes_ * dtype_bytes)
+
+
+def gcn_order_report(layer_dims, num_rows: int, combined: int,
+                     nnz_eff: float, train: bool = True,
+                     fused: bool = False, tile: int = _TILE) -> list[dict]:
+    """Per-layer cost table: {order: GcnLayerCost} + the argmin choice.
+
+    `layer_dims` is ``ModelConfig.layer_dims()`` — [(fin, fout)] per layer.
+    The choice minimizes FLOPs; HBM bytes break exact FLOP ties (and are
+    reported for the roofline-minded reader either way). Callers with the
+    real kernel tile size in hand (PipeGCN.layer_orders) pass it through —
+    it prices the fused backward's prologue recompute.
+    """
+    out = []
+    for ell, (fin, fout) in enumerate(layer_dims):
+        costs = {
+            order: gcn_layer_order_cost(
+                order, fin, fout, num_rows, combined, nnz_eff,
+                first_layer=(ell == 0), train=train,
+                fused=(fused and order == "aggregate-first"), tile=tile)
+            for order in GCN_ORDERS
+        }
+        chosen = min(GCN_ORDERS,
+                     key=lambda o: (costs[o].flops, costs[o].hbm_bytes))
+        out.append({"layer": ell, "costs": costs, "chosen": chosen})
+    return out
+
+
+def choose_gcn_orders(layer_dims, num_rows: int, combined: int,
+                      nnz_eff: float, train: bool = True,
+                      fused: bool = False,
+                      tile: int = _TILE) -> tuple[str, ...]:
+    """The static per-layer ordering the "auto" matmul_order resolves to."""
+    return tuple(r["chosen"] for r in gcn_order_report(
+        layer_dims, num_rows, combined, nnz_eff, train=train, fused=fused,
+        tile=tile))
+
+

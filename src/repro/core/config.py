@@ -15,9 +15,26 @@ class ModelConfig:
     num_classes: int = 16
     dropout: float = 0.5
     multilabel: bool = False       # sigmoid BCE (Yelp) vs softmax CE
-    # Aggregation engine for the Eq. 3/4 SpMM: "coo" (segment_sum fallback)
-    # or "blocksparse" (Pallas MXU kernels; Topology must carry tiles).
+    # Aggregation engine for the Eq. 3/4 SpMM: "coo" (segment_sum fallback),
+    # "blocksparse" (Pallas MXU kernels; Topology must carry tiles), or
+    # "fused" (blocksparse tiles + single-pass aggregate⊗transform kernels
+    # with the dense weight contracted in the same grid pass).
     agg: str = "coo"
+    # Matmul ordering of the layer pair P·H·W (Demirci et al.: a first-order
+    # FLOP knob — P·(H·W) costs 2·nnz·F_out where (P·H)·W costs 2·nnz·F_in):
+    #   "aggregate-first"  z = P·H, then u = z·W   (the paper's Eq. 3 order)
+    #   "transform-first"  hw = H·W, then u = P·hw
+    #   "auto"             per-layer argmin-FLOPs via the static cost model
+    #                      (repro.analysis.cost.choose_gcn_orders)
+    matmul_order: str = "aggregate-first"
+
+    ORDERS = ("aggregate-first", "transform-first", "auto")
+
+    def __post_init__(self):
+        if self.matmul_order not in self.ORDERS:
+            raise ValueError(
+                f"unknown matmul_order {self.matmul_order!r}; "
+                f"have {self.ORDERS}")
 
     def layer_dims(self) -> list[tuple[int, int]]:
         """[(fan_in_of_aggregated, fan_out)] per layer (pre-concat dims)."""

@@ -18,11 +18,21 @@ Design notes
 
 * The aggregation SpMM (Eq. 3 forward, Eq. 4 transpose) is pluggable:
   ``ModelConfig.agg`` selects between the padded-COO ``segment_sum`` engine
-  ("coo", the verified fallback) and the MXU-shaped Pallas block-sparse
-  engine ("blocksparse", see repro.kernels.gcn_spmm / aggregate). The
-  blocksparse engine needs tile streams on the Topology —
-  ``topology_from(pg, with_tiles=True)`` attaches them. Both engines run
-  under both backends; the layer math never sees the storage format.
+  ("coo", the verified fallback), the MXU-shaped Pallas block-sparse engine
+  ("blocksparse"), and the fused aggregate⊗transform engine ("fused", which
+  contracts the dense layer weight in the same Pallas grid pass — see
+  repro.kernels.gcn_spmm / aggregate). The tile engines need tile streams
+  on the Topology — ``topology_from(pg, with_tiles=True)`` attaches them.
+  All engines run under both backends; the layer math never sees the
+  storage format.
+
+* The layer matmul ORDER is itself a knob (``ModelConfig.matmul_order``):
+  aggregate-first (z = P·H then z·W, the paper's Eq. 3 order),
+  transform-first (H·W then P·(H·W) — cheaper when F_out < F_in), or
+  "auto", which resolves per layer from the static FLOP model in
+  ``repro.analysis.cost`` (``layer_orders``). Under transform-first the
+  aggregation residual z is never materialized; the weight gradient is
+  computed as combᵀ·(Pᵀ·du) instead of zᵀ·du.
 
 * Pipeline state (the "stale buffers") is explicit and threaded through the
   step function — this is what makes the deferred collectives free of data
@@ -59,6 +69,7 @@ import numpy as np
 from repro.core.config import ModelConfig, PipeConfig
 from repro.graph.halo import PartitionedGraph, extract_partition_tiles
 from repro.kernels.aggregate import get_engine
+from repro.kernels.gcn_spmm import TILE
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -467,38 +478,109 @@ class PipeGCN:
                 f"aggregation engine {engine.name!r} needs Topology fields "
                 f"{engine.fields}, but some are None — build the topology "
                 "with topology_from(pg, with_tiles=True) or "
-                "GraphDataPipeline.build(..., agg='blocksparse')")
+                f"GraphDataPipeline.build(..., agg={engine.name!r})")
         return tslice
 
-    def _layer_forward(self, tslice, w, b, h_prev, halo, drop_mask):
-        """One GCN/SAGE layer on one partition. Returns (h, residuals)."""
+    def layer_orders(self, topo: Topology, train: bool = True) -> tuple[str, ...]:
+        """Per-layer matmul ordering, resolved statically (trace-time).
+
+        "auto" feeds the static FLOP model (`repro.analysis.cost`) the
+        shard's effective sparse work: n_tiles·T² for the tile engines
+        (padded tiles do real MXU work — computed via `tile_density`), the
+        padded COO length otherwise. Everything here is a Python int from
+        array *shapes*, so the choice is identical on every backend and
+        every partition and never enters the traced program.
+        """
+        mo = self.model.matmul_order
+        L = self.model.num_layers
+        if mo != "auto":
+            return (mo,) * L
+        engine = self.engine
+        combined = topo.max_inner + topo.halo_size
+        if engine.name in ("blocksparse", "fused") \
+                and topo.tile_rows is not None:
+            # = tile_density(...)·row_blocks·col_blocks·T² — every stored
+            # tile does a full T×T MXU contraction per feature column
+            nnz_eff = topo.tile_rows.shape[-1] * TILE * TILE
+        else:
+            nnz_eff = topo.edge_row.shape[-1]             # padded COO work
+        from repro.analysis.cost import choose_gcn_orders
+        return choose_gcn_orders(self.model.layer_dims(), topo.max_inner,
+                                 combined, nnz_eff, train=train,
+                                 fused=engine.name == "fused", tile=TILE)
+
+    def _layer_forward(self, tslice, w, b, h_prev, halo, drop_mask,
+                       order: str = "aggregate-first",
+                       fuse_relu: bool = False, with_z: bool = True):
+        """One GCN/SAGE layer on one partition. Returns (u, (comb, z)).
+
+        `order` picks the contraction of P·comb·W: aggregate-first routes
+        through ``engine.aggregate_transform`` (the fused engine contracts
+        the weight inside the Pallas grid pass; other engines compose),
+        transform-first applies the dense matmul before the SpMM. z is the
+        aggregation residual the aggregate-first backward needs for the
+        weight gradient — None under transform-first (gw is computed from
+        comb and Pᵀ·du there) or when `with_z=False` (eval). With
+        `fuse_relu` the returned u is already activated — inside the fused
+        kernel's epilogue when possible (GCN kind, aggregate-first), as a
+        plain jnp op otherwise.
+        """
         max_inner = h_prev.shape[0]
+        fin = h_prev.shape[-1]
         comb = jnp.concatenate([h_prev, halo], axis=0)
         if drop_mask is not None:
             comb = comb * drop_mask
-        z = self.engine.spmm(tslice, comb, max_inner)
-        if self.model.kind == "sage":
-            a = jnp.concatenate([z, comb[:max_inner]], axis=-1)
+        sage = self.model.kind == "sage"
+        w1 = w[:fin] if sage else w
+        applied_act = False
+        if order == "transform-first":
+            u = self.engine.spmm(tslice, comb @ w1, max_inner) + b
+            z = None
         else:
-            a = z
-        u = a @ w + b
-        return u, (comb, a)
+            in_kernel_relu = fuse_relu and not sage
+            u, z = self.engine.aggregate_transform(
+                tslice, comb, w1, b, max_inner,
+                relu=in_kernel_relu, with_z=with_z)
+            applied_act = in_kernel_relu
+        if sage:
+            u = u + comb[:max_inner] @ w[fin:]
+        if fuse_relu and not applied_act:
+            u = jax.nn.relu(u)
+        return u, (comb, z)
 
-    def _layer_backward(self, tslice, w, du, comb, drop_mask, max_inner):
-        """Manual VJP of one layer. Returns (dH_inner_local, dB_halo)."""
+    def _layer_backward(self, tslice, w, du, comb, z, drop_mask, max_inner,
+                        order: str = "aggregate-first",
+                        need_dcomb: bool = True):
+        """Manual VJP of one layer, weight gradient included. Returns
+        (gW, dH_inner_local, dB_halo); the d-terms are None when
+        `need_dcomb=False` (layer 0 — Alg. 1 stops the backward there,
+        though transform-first still needs Pᵀ·du for its weight gradient).
+        """
         combined = comb.shape[0]
         fin = comb.shape[-1]
-        da = du @ w.T
-        if self.model.kind == "sage":
-            dz, dself = da[..., :fin], da[..., fin:]
+        sage = self.model.kind == "sage"
+        w1 = w[:fin] if sage else w
+        if order == "transform-first":
+            dhw = self.engine.spmm_t(tslice, du, combined)
+            gw = comb.T @ dhw                 # = zᵀ·du without z: combᵀPᵀdu
+            if sage:
+                gw = jnp.concatenate([gw, comb[:max_inner].T @ du], axis=0)
+            if not need_dcomb:
+                return gw, None, None
+            dcomb = dhw @ w1.T
         else:
-            dz, dself = da, None
-        dcomb = self.engine.spmm_t(tslice, dz, combined)
-        if dself is not None:
-            dcomb = dcomb.at[:max_inner].add(dself)
+            gw = z.T @ du
+            if sage:
+                gw = jnp.concatenate([gw, comb[:max_inner].T @ du], axis=0)
+            if not need_dcomb:
+                return gw, None, None
+            dcomb = self.engine.aggregate_transform_t(tslice, du, w1,
+                                                      combined)
+        if sage:
+            dcomb = dcomb.at[:max_inner].add(du @ w[fin:].T)
         if drop_mask is not None:
             dcomb = dcomb * drop_mask
-        return dcomb[:max_inner], dcomb[max_inner:]
+        return gw, dcomb[:max_inner], dcomb[max_inner:]
 
     # ---------------- forward/backward step (per partition view) --------
 
@@ -525,6 +607,7 @@ class PipeGCN:
 
         h = data.x
         fuse = pipe.fused        # stale + fuse_exchange: deferred collectives
+        orders = self.layer_orders(topo, train=train)   # static, per layer
         residuals = []
         new_feat = []
         pending_feat = []        # fused mode: per-layer sends, exchanged once
@@ -567,18 +650,26 @@ class PipeGCN:
             else:
                 dm = None
 
+            act = ell < L - 1
+            # Eval never needs residuals: skip the z output (the fused
+            # kernel then skips its HBM write) and fuse the ReLU epilogue.
+            fuse_relu = act and not train
             if not lead:
-                u, (comb, a) = self._layer_forward(
-                    tslice, params[f"w{ell}"], params[f"b{ell}"], h, halo, dm)
+                u, (comb, z) = self._layer_forward(
+                    tslice, params[f"w{ell}"], params[f"b{ell}"], h, halo,
+                    dm, order=orders[ell], fuse_relu=fuse_relu,
+                    with_z=train)
             else:
                 fwd = jax.vmap(
                     lambda ts, h_, halo_, dm_, w_=params[f"w{ell}"],
-                           b_=params[f"b{ell}"]:
-                    self._layer_forward(ts, w_, b_, h_, halo_, dm_),
+                           b_=params[f"b{ell}"], o_=orders[ell]:
+                    self._layer_forward(ts, w_, b_, h_, halo_, dm_,
+                                        order=o_, fuse_relu=fuse_relu,
+                                        with_z=train),
                     in_axes=(0, 0, 0, 0 if dm is not None else None))
-                u, (comb, a) = fwd(tslice, h, halo, dm)
-            residuals.append((comb, a, u, dm))
-            h = jax.nn.relu(u) if ell < L - 1 else u
+                u, (comb, z) = fwd(tslice, h, halo, dm)
+            residuals.append((comb, z, u, dm))
+            h = jax.nn.relu(u) if act and not fuse_relu else u
 
         if fuse:
             # ONE collective for all L layers' boundary features, issued
@@ -617,24 +708,29 @@ class PipeGCN:
         pending_grad = []        # fused mode: (ell, db) per layer, one exchange
         j = dlogits
         for ell in reversed(range(L)):
-            comb, a, u, dm = residuals[ell]
+            comb, z, u, dm = residuals[ell]
             du = j if ell == L - 1 else j * (u > 0).astype(j.dtype)
-            gw_local = jnp.einsum("...if,...io->...fo", a, du)
             gb_local = jnp.sum(du, axis=-2)
+            need_dcomb = ell > 0    # Alg. 1 stops the backward at layer 0
+            if not lead:
+                gw_local, dh_local, db = self._layer_backward(
+                    tslice, params[f"w{ell}"], du, comb, z, dm, max_inner,
+                    order=orders[ell], need_dcomb=need_dcomb)
+            else:
+                bwd = jax.vmap(
+                    lambda ts, du_, comb_, z_, dm_, w_=params[f"w{ell}"],
+                           o_=orders[ell]:
+                    self._layer_backward(ts, w_, du_, comb_, z_, dm_,
+                                         max_inner, order=o_,
+                                         need_dcomb=need_dcomb),
+                    in_axes=(0, 0, 0, 0 if z is not None else None,
+                             0 if dm is not None else None))
+                gw_local, dh_local, db = bwd(tslice, du, comb, z, dm)
             grads[f"w{ell}"] = backend.psum(gw_local)
             grads[f"b{ell}"] = backend.psum(gb_local)
             if ell == 0:
                 new_grad[ell] = buffers["grad"][ell]
                 break
-            if not lead:
-                dh_local, db = self._layer_backward(
-                    tslice, params[f"w{ell}"], du, comb, dm, max_inner)
-            else:
-                bwd = jax.vmap(
-                    lambda ts, du_, comb_, dm_, w_=params[f"w{ell}"]:
-                    self._layer_backward(ts, w_, du_, comb_, dm_, max_inner),
-                    in_axes=(0, 0, 0, 0 if dm is not None else None))
-                dh_local, db = bwd(tslice, du, comb, dm)
             db = db.reshape(db.shape[:-2] + (P, topo.slot, dims[ell][0]))
             # -- boundary gradient communication ---------------------------
             # dtype the per-layer schedule would hand to the scatter:

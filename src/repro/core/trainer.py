@@ -82,6 +82,12 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
                  f"{n_coll} boundary exchanges/train step, local on the "
                  "sim backend")
         log(f"comm schedule: {sched} ({where}, L={model_cfg.num_layers})")
+        orders = model.layer_orders(topo, train=True)
+        how = ("static FLOP model" if model_cfg.matmul_order == "auto"
+               else "forced")
+        log(f"matmul order ({how}, agg={model_cfg.agg}): "
+            + " ".join(f"L{i}:{'PH.W' if o == 'aggregate-first' else 'P.HW'}"
+                       for i, o in enumerate(orders)))
     params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)

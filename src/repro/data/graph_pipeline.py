@@ -2,9 +2,10 @@
 padded shards -> device arrays. One call site for every example/benchmark.
 
 The `agg` knob mirrors ``ModelConfig.agg``: building with
-``agg="blocksparse"`` additionally extracts the per-partition block-sparse
-tile streams onto the Topology, so either aggregation engine can run on the
-same partitioned graph (the COO shards are always present)."""
+``agg="blocksparse"`` or ``agg="fused"`` additionally extracts the
+per-partition block-sparse tile streams onto the Topology, so any
+aggregation engine can run on the same partitioned graph (the COO shards
+are always present)."""
 from __future__ import annotations
 
 import dataclasses
@@ -71,7 +72,7 @@ class GraphDataPipeline:
         part = partition_graph(ds.graph, num_parts, seed=seed,
                                method=partition_method)
         pg = build_partitioned_graph(prop, part, num_parts)
-        topo = topology_from(pg, with_tiles=(agg == "blocksparse"))
+        topo = topology_from(pg, with_tiles=(agg in ("blocksparse", "fused")))
         # x/labels/train_mask are split-independent: pack them ONCE and share
         # the arrays across the three views; only eval_mask differs per split.
         base = shard_data(pg, ds.features, ds.labels, ds.train_mask,

@@ -1,24 +1,39 @@
 """Pluggable aggregation engines for the PipeGCN hot path (Eq. 3/4 SpMM).
 
-The training loop calls aggregation through a narrow two-method interface:
+The training loop calls aggregation through a narrow interface:
 
-    z     = engine.spmm(tslice, comb, num_rows)     # z = P_local · comb
-    dcomb = engine.spmm_t(tslice, dz, num_cols)     # δcomb = P_localᵀ · δz
+    z      = engine.spmm(tslice, comb, num_rows)      # z = P_local · comb
+    dcomb  = engine.spmm_t(tslice, dz, num_cols)      # δcomb = P_localᵀ · δz
+    u, z   = engine.aggregate_transform(tslice, comb, w, b, num_rows)
+             #  u = (P_local · comb) @ w + b   (aggregate-first layer fwd)
+    dcomb  = engine.aggregate_transform_t(tslice, du, w, num_cols)
+             #  δcomb = P_localᵀ · (du @ wᵀ)   (aggregate-first layer bwd)
 
 `tslice` is the tuple of per-partition Topology fields named by
 ``engine.fields`` — the model layer stays agnostic to the storage format.
-Two implementations:
+The ``aggregate_transform*`` pair defaults to COMPOSING the two primitive
+ops (an SpMM plus a dense matmul, with the (rows, F_in) intermediate
+materialized between them), so "coo" and plain "blocksparse" behave exactly
+as before; the "fused" engine overrides it with single-pass Pallas kernels
+in which the intermediate never leaves VMEM. Three implementations:
 
   coo         padded COO + `jax.ops.segment_sum` (the verified fallback;
               exact in float64, works for any shape).
   blocksparse MXU-shaped Pallas kernels over TILE×TILE tiles
               (`repro.kernels.gcn_spmm`). Inputs are zero-padded to tile /
-              feature-block multiples on the fly and the result is sliced
-              back, so callers never see the padded shapes. Compute is f32.
+              feature-block multiples only when needed (topology-padded
+              shapes skip the pad entirely) and the result is sliced back,
+              so callers never see the padded shapes. Compute is f32.
+  fused       blocksparse storage + the fused aggregate+transform kernels:
+              forward epilogue matmul (u = z@w + b on the run-flush, with
+              optional fused bias+ReLU and z as an optional second output)
+              and backward prologue matmul (dcomb = Pᵀ·(du@wᵀ)). Computes
+              in the caller's dtype (f32 in production; f64 under the x64
+              exactness tests, where it matches "coo" to 1e-12).
 
-Select with ``ModelConfig.agg`` ("coo" | "blocksparse"); blocksparse needs
-tile fields on the Topology (``topology_from(pg, with_tiles=True)`` or
-``GraphDataPipeline.build(..., agg="blocksparse")``).
+Select with ``ModelConfig.agg`` ("coo" | "blocksparse" | "fused"); the tile
+engines need tile fields on the Topology (``topology_from(pg,
+with_tiles=True)`` or ``GraphDataPipeline.build(..., agg="blocksparse")``).
 """
 from __future__ import annotations
 
@@ -33,7 +48,48 @@ def _ceil_to(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-class CooEngine:
+def _pad2(x, rows: int, cols: int):
+    """Zero-pad a 2-D array up to (rows, cols), skipping the op entirely
+    when the shape already matches (the common case after topology padding:
+    `jnp.pad` is not free even for zero-width pads — it still emits a
+    copy)."""
+    r, c = x.shape
+    if (r, c) == (rows, cols):
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+class AggregationEngine:
+    """Interface + default fused-op composition shared by all engines."""
+
+    name: str
+    fields: tuple[str, ...]
+
+    def spmm(self, tslice, comb, num_rows: int):
+        raise NotImplementedError
+
+    def spmm_t(self, tslice, dz, num_cols: int):
+        raise NotImplementedError
+
+    def aggregate_transform(self, tslice, comb, w, b, num_rows: int,
+                            relu: bool = False, with_z: bool = True):
+        """u = (P·comb) @ w + b (optionally ReLU'd), plus the aggregation
+        residual z = P·comb (None when `with_z=False`, e.g. at eval).
+        Default: compose the primitive SpMM with a dense matmul — the
+        (num_rows, F_in) intermediate round-trips through HBM."""
+        z = self.spmm(tslice, comb, num_rows)
+        u = z @ w + b
+        if relu:
+            u = jax.nn.relu(u)
+        return u, (z if with_z else None)
+
+    def aggregate_transform_t(self, tslice, du, w, num_cols: int):
+        """δcomb = Pᵀ·(du @ wᵀ). Default: compose — the (rows, F_in)
+        dz intermediate round-trips through HBM."""
+        return self.spmm_t(tslice, du @ w.T, num_cols)
+
+
+class CooEngine(AggregationEngine):
     """Padded-COO aggregation via segment_sum (scatter-add)."""
 
     name = "coo"
@@ -50,13 +106,14 @@ class CooEngine:
         return jax.ops.segment_sum(vals, edge_col, num_segments=num_cols)
 
 
-class BlockSparseEngine:
+class BlockSparseEngine(AggregationEngine):
     """Block-sparse aggregation on the Pallas SpMM kernels.
 
-    Pads rows to TILE and features to FEAT_BLOCK multiples per call (the
-    tile grid is fixed offline by `build_tile_topology`, so row padding is
-    only about matching the kernel's static output shape), computes in
-    float32, and slices/casts back to the caller's shape and dtype.
+    Pads rows to TILE and features to FEAT_BLOCK multiples per call when
+    the caller's shapes are not already multiples (the tile grid is fixed
+    offline by `build_tile_topology`, so row padding is only about matching
+    the kernel's static output shape), computes in float32, and
+    slices/casts back to the caller's shape and dtype.
     """
 
     name = "blocksparse"
@@ -67,31 +124,106 @@ class BlockSparseEngine:
         tile_rows, tile_cols, tile_vals = tslice[:3]
         combined, f = comb.shape
         rpad = _ceil_to(num_rows, TILE)
-        cpad = _ceil_to(combined, TILE)
         fpad = _ceil_to(f, FEAT_BLOCK)
-        combp = jnp.pad(comb.astype(jnp.float32),
-                        ((0, cpad - combined), (0, fpad - f)))
+        combp = _pad2(comb.astype(jnp.float32),
+                      _ceil_to(combined, TILE), fpad)
         z = ops.spmm(tile_rows, tile_cols, tile_vals, combp, rpad)
+        assert z.shape == (rpad, fpad), (z.shape, rpad, fpad)
         return z[:num_rows, :f].astype(comb.dtype)
 
     def spmm_t(self, tslice, dz, num_cols: int):
         tile_vals = tslice[2]
         t_out, t_in, t_perm = tslice[3:]
         num_rows, f = dz.shape
-        rpad = _ceil_to(num_rows, TILE)
         cpad = _ceil_to(num_cols, TILE)
         fpad = _ceil_to(f, FEAT_BLOCK)
-        dzp = jnp.pad(dz.astype(jnp.float32),
-                      ((0, rpad - num_rows), (0, fpad - f)))
+        dzp = _pad2(dz.astype(jnp.float32),
+                    _ceil_to(num_rows, TILE), fpad)
         d = ops.spmm_t(t_out, t_in, t_perm, tile_vals, dzp, cpad)
+        assert d.shape == (cpad, fpad), (d.shape, cpad, fpad)
         return d[:num_cols, :f].astype(dz.dtype)
 
 
-ENGINES = {e.name: e for e in (CooEngine(), BlockSparseEngine())}
+class FusedBlockSparseEngine(BlockSparseEngine):
+    """Blocksparse tiles + fused aggregate⊗transform Pallas kernels.
+
+    Unlike the plain blocksparse engine this one computes in the CALLER'S
+    dtype (tile values are upcast to it), so under `jax_enable_x64` the
+    whole layer runs in f64 interpret mode and stays 1e-12-comparable to
+    the COO engine — the exactness bar the SPMD parity matrix enforces.
+    """
+
+    name = "fused"
+
+    def _vals(self, tslice, like):
+        tile_vals = tslice[2]
+        return tile_vals.astype(like.dtype)
+
+    # The primitive ops (used by the transform-first ordering) also keep
+    # the caller's dtype — override the f32-casting parent versions.
+    def spmm(self, tslice, comb, num_rows: int):
+        tile_rows, tile_cols = tslice[:2]
+        combined, f = comb.shape
+        rpad = _ceil_to(num_rows, TILE)
+        fpad = _ceil_to(f, FEAT_BLOCK)
+        combp = _pad2(comb, _ceil_to(combined, TILE), fpad)
+        z = ops.spmm(tile_rows, tile_cols, self._vals(tslice, comb),
+                     combp, rpad)
+        assert z.shape == (rpad, fpad), (z.shape, rpad, fpad)
+        return z[:num_rows, :f]
+
+    def spmm_t(self, tslice, dz, num_cols: int):
+        t_out, t_in, t_perm = tslice[3:]
+        num_rows, f = dz.shape
+        cpad = _ceil_to(num_cols, TILE)
+        fpad = _ceil_to(f, FEAT_BLOCK)
+        dzp = _pad2(dz, _ceil_to(num_rows, TILE), fpad)
+        d = ops.spmm_t(t_out, t_in, t_perm, self._vals(tslice, dz),
+                       dzp, cpad)
+        assert d.shape == (cpad, fpad), (d.shape, cpad, fpad)
+        return d[:num_cols, :f]
+
+    def aggregate_transform(self, tslice, comb, w, b, num_rows: int,
+                            relu: bool = False, with_z: bool = True):
+        tile_rows, tile_cols = tslice[:2]
+        combined, fin = comb.shape
+        fout = w.shape[1]
+        rpad = _ceil_to(num_rows, TILE)
+        fin_p = _ceil_to(fin, FEAT_BLOCK)
+        fout_p = _ceil_to(fout, FEAT_BLOCK)
+        combp = _pad2(comb, _ceil_to(combined, TILE), fin_p)
+        wp = _pad2(w, fin_p, fout_p)
+        bp = _pad2(b.reshape(1, -1), 1, fout_p)
+        u, z = ops.spmm_fused(tile_rows, tile_cols, self._vals(tslice, comb),
+                              combp, wp, bp, rpad, relu=relu, with_z=with_z)
+        assert u.shape == (rpad, fout_p), (u.shape, rpad, fout_p)
+        u = u[:num_rows, :fout]
+        if with_z:
+            assert z.shape == (rpad, fin_p), (z.shape, rpad, fin_p)
+            z = z[:num_rows, :fin]
+        return u, z
+
+    def aggregate_transform_t(self, tslice, du, w, num_cols: int):
+        t_out, t_in, t_perm = tslice[3:]
+        num_rows, fout = du.shape
+        fin = w.shape[0]
+        cpad = _ceil_to(num_cols, TILE)
+        fin_p = _ceil_to(fin, FEAT_BLOCK)
+        fout_p = _ceil_to(fout, FEAT_BLOCK)
+        dup = _pad2(du, _ceil_to(num_rows, TILE), fout_p)
+        wp = _pad2(w, fin_p, fout_p)
+        d = ops.spmm_fused_t(t_out, t_in, t_perm, self._vals(tslice, du),
+                             dup, wp, cpad)
+        assert d.shape == (cpad, fin_p), (d.shape, cpad, fin_p)
+        return d[:num_cols, :fin]
+
+
+ENGINES = {e.name: e for e in (CooEngine(), BlockSparseEngine(),
+                               FusedBlockSparseEngine())}
 
 
 def get_engine(name: str):
-    """Look up an aggregation engine by name ("coo" | "blocksparse")."""
+    """Look up an aggregation engine ("coo" | "blocksparse" | "fused")."""
     try:
         return ENGINES[name]
     except KeyError:

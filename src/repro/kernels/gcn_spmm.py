@@ -22,16 +22,34 @@ it walks the tiles in a column-major order (a prefetched permutation into
 accumulating into the *column* block — so the manual backward runs
 block-sparse without storing a second copy of P.
 
+The FUSED kernels (`spmm_block_sparse_fused` / `spmm_block_sparse_fused_t`)
+additionally contract the dense layer weight in the same grid pass, so the
+(rows, F_in)-sized aggregation intermediates never round-trip through HBM:
+
+  forward   u[r] = z[r] @ W + b   with z[r] = Σ_run tile @ h[c]   (epilogue
+            matmul on the run-flush: the z accumulator lives in VMEM and the
+            (TILE, F_out) output block is produced in the same pass, with
+            optional fused bias+ReLU; z is an optional second output for the
+            backward's weight-gradient residual)
+  backward  dcomb[c] += tileᵀ @ (du[r] @ Wᵀ)                      (prologue
+            matmul per tile slot: du's row block is transformed to F_in
+            inside the kernel, so the (rows, F_in) dz intermediate is never
+            materialized; the MXU recompute per extra tile in a row block is
+            the price, accounted by the `analysis.cost` ordering model)
+
 Tile extraction (`build_tile_topology`) works directly on COO triples and
 never materializes a dense (N, N) matrix: tiles are bucketed with one
-`np.unique` over block keys and one scatter-add into the (n_tiles, T, T)
-value array — O(nnz + n_tiles·T²) memory, the block-sparse footprint.
+`np.unique` over block keys and one flat-key scatter-add into the
+(n_tiles·T·T,) value buffer — O(nnz + n_tiles·T²) memory, the block-sparse
+footprint (multi-index `np.add.at` was 2-10× slower at large nnz; see
+benchmarks/bench_kernels.py for the extraction timing record).
 
-Both engines behind one interface live in `repro.kernels.aggregate`; the
+The engines behind one interface live in `repro.kernels.aggregate`; the
 training path selects them via ``ModelConfig.agg``.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -42,6 +60,22 @@ from jax.experimental.pallas import tpu as pltpu
 
 TILE = 128          # MXU-shaped adjacency tile
 FEAT_BLOCK = 128    # feature columns per grid step
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """`interpret=None` auto-detect shared by every kernel entry point (the
+    jitted ops.py wrappers AND direct callers): interpret on CPU (kernel
+    bodies execute in Python for validation), compiled on real TPU."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    """VMEM accumulator dtype: f32 for f32/bf16 inputs (MXU-native), f64
+    when the caller runs in f64 (interpret mode only — used by the exactness
+    tests, where the fused engine must match the COO engine at 1e-12)."""
+    return jnp.promote_types(dtype, jnp.float32)
 
 
 # ----------------------------------------------------------------------
@@ -61,7 +95,7 @@ def _kernel(rows_ref, cols_ref, vals_ref, h_ref, out_ref, acc_ref):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(vals_ref[...], h_ref[...],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc_ref.dtype)
 
     last = t == pl.num_programs(1) - 1
     last_of_run = jnp.logical_or(
@@ -74,7 +108,7 @@ def _kernel(rows_ref, cols_ref, vals_ref, h_ref, out_ref, acc_ref):
 
 
 def spmm_block_sparse(tile_rows, tile_cols, tile_vals, h, num_rows: int,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """z = P_blocksparse · h.
 
     tile_rows/cols: (n_tiles,) int32 sorted by row; tile_vals: (n_tiles,T,T);
@@ -82,6 +116,7 @@ def spmm_block_sparse(tile_rows, tile_cols, tile_vals, h, num_rows: int,
     num_rows: output rows (multiple of T). Rows with no tiles stay zero only
     if every row-block has ≥1 tile — callers pad with an explicit zero tile
     per empty row-block (build_tile_topology does this).
+    interpret=None auto-detects (True on CPU, False on TPU).
     """
     n_tiles = tile_rows.shape[0]
     f = h.shape[1]
@@ -101,10 +136,11 @@ def spmm_block_sparse(tile_rows, tile_cols, tile_vals, h, num_rows: int,
             ],
             out_specs=pl.BlockSpec((TILE, FEAT_BLOCK),
                                    lambda fb, t, rows, cols: (rows[t], fb)),
-            scratch_shapes=[pltpu.VMEM((TILE, FEAT_BLOCK), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((TILE, FEAT_BLOCK),
+                                       _acc_dtype(h.dtype))],
         ),
         out_shape=jax.ShapeDtypeStruct((num_rows, f), h.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(tile_rows, tile_cols, tile_vals, h)
 
 
@@ -131,7 +167,7 @@ def _kernel_t(out_ref_s, in_ref_s, perm_ref, vals_ref, dz_ref, out_ref,
     acc_ref[...] += jax.lax.dot_general(
         vals_ref[...], dz_ref[...],
         dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=acc_ref.dtype)
 
     last = t == pl.num_programs(1) - 1
     last_of_run = jnp.logical_or(
@@ -144,7 +180,7 @@ def _kernel_t(out_ref_s, in_ref_s, perm_ref, vals_ref, dz_ref, out_ref,
 
 
 def spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """δcomb = Pᵀ_blocksparse · δz, reusing the forward tile values.
 
     t_out:  (n_tiles,) int32 output (column) block per stream slot, sorted
@@ -154,6 +190,7 @@ def spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
     tile_vals: (n_tiles, T, T) forward tile values (NOT transposed).
     dz: (R, F) with R = num_row_blocks·T, F % FEAT_BLOCK == 0.
     num_cols: output rows of the transpose product (multiple of T).
+    interpret=None auto-detects (True on CPU, False on TPU).
     """
     n_tiles = t_out.shape[0]
     f = dz.shape[1]
@@ -173,11 +210,186 @@ def spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
             ],
             out_specs=pl.BlockSpec((TILE, FEAT_BLOCK),
                                    lambda fb, t, to, ti, tp: (to[t], fb)),
-            scratch_shapes=[pltpu.VMEM((TILE, FEAT_BLOCK), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((TILE, FEAT_BLOCK),
+                                       _acc_dtype(dz.dtype))],
         ),
         out_shape=jax.ShapeDtypeStruct((num_cols, f), dz.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(t_out, t_in, t_perm, tile_vals, dz)
+
+
+# ----------------------------------------------------------------------
+# Fused aggregate+transform kernels: the dense weight contraction happens
+# in the SAME grid pass as the block-sparse aggregation, so the
+# (rows, F_in)-sized intermediates (z forward, du·Wᵀ backward) never
+# round-trip through HBM between two ops.
+# ----------------------------------------------------------------------
+
+def _kernel_fused(rows_ref, cols_ref, vals_ref, h_ref, w_ref, b_ref,
+                  u_ref, *rest, relu: bool, with_z: bool):
+    """Grid: (n_tiles,). The z-accumulator holds one output row block over
+    the FULL (padded) F_in axis in VMEM; on the last tile of a row run the
+    epilogue matmul contracts it against the resident weight block and adds
+    the bias (u = acc @ W + b, optional ReLU) straight into the (TILE,
+    F_out) output block — also VMEM-resident across the run — so z is never
+    read back from HBM for the transform. With `with_z` the accumulator is
+    additionally flushed as a second output (the residual the training
+    backward needs for the weight gradient)."""
+    if with_z:
+        z_ref, acc_ref = rest
+    else:
+        (acc_ref,) = rest
+    t = pl.program_id(0)
+
+    first_of_run = jnp.logical_or(
+        t == 0, rows_ref[t] != rows_ref[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first_of_run)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(vals_ref[...], h_ref[...],
+                            preferred_element_type=acc_ref.dtype)
+
+    last = t == pl.num_programs(0) - 1
+    last_of_run = jnp.logical_or(
+        last, rows_ref[t] != rows_ref[jnp.minimum(t + 1,
+                                                  pl.num_programs(0) - 1)])
+
+    @pl.when(last_of_run)
+    def _():
+        u = jnp.dot(acc_ref[...], w_ref[...],
+                    preferred_element_type=acc_ref.dtype) + b_ref[...]
+        if relu:
+            u = jnp.maximum(u, 0)
+        u_ref[...] = u.astype(u_ref.dtype)
+        if with_z:
+            z_ref[...] = acc_ref[...].astype(z_ref.dtype)
+
+
+def spmm_block_sparse_fused(tile_rows, tile_cols, tile_vals, h, w, b,
+                            num_rows: int, relu: bool = False,
+                            with_z: bool = True,
+                            interpret: bool | None = None):
+    """Fused u = (P_blocksparse · h) @ w + b (optional ReLU epilogue).
+
+    h: (C, F_in), w: (F_in, F_out), b: (1, F_out); C and num_rows multiples
+    of TILE, F_in/F_out multiples of FEAT_BLOCK (zero-padded by the engine).
+    Returns (u, z) with z = P·h when `with_z` (the backward residual),
+    else (u, None). VMEM per grid step is one (TILE, F_in) accumulator +
+    the (F_in, F_out) weight + one (TILE, F_out) output block — GCN layer
+    widths (≤ a few thousand features) fit comfortably in 16 MB.
+    """
+    n_tiles = tile_rows.shape[0]
+    fin = h.shape[1]
+    fout = w.shape[1]
+    assert w.shape[0] == fin and b.shape == (1, fout)
+    assert fin % FEAT_BLOCK == 0 and fout % FEAT_BLOCK == 0
+    assert num_rows % TILE == 0
+    acc = _acc_dtype(h.dtype)
+
+    out_shape = [jax.ShapeDtypeStruct((num_rows, fout), h.dtype)]
+    out_specs = [pl.BlockSpec((TILE, fout),
+                              lambda t, rows, cols: (rows[t], 0))]
+    if with_z:
+        out_shape.append(jax.ShapeDtypeStruct((num_rows, fin), h.dtype))
+        out_specs.append(pl.BlockSpec((TILE, fin),
+                                      lambda t, rows, cols: (rows[t], 0)))
+
+    outs = pl.pallas_call(
+        partial(_kernel_fused, relu=relu, with_z=with_z),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,      # tile_rows, tile_cols
+            grid=(n_tiles,),
+            in_specs=[
+                pl.BlockSpec((None, TILE, TILE),
+                             lambda t, rows, cols: (t, 0, 0)),
+                pl.BlockSpec((TILE, fin),
+                             lambda t, rows, cols: (cols[t], 0)),
+                pl.BlockSpec((fin, fout), lambda t, rows, cols: (0, 0)),
+                pl.BlockSpec((1, fout), lambda t, rows, cols: (0, 0)),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((TILE, fin), acc)],
+        ),
+        out_shape=out_shape,
+        interpret=resolve_interpret(interpret),
+    )(tile_rows, tile_cols, tile_vals, h, w, b)
+    return (outs[0], outs[1]) if with_z else (outs[0], None)
+
+
+def _kernel_fused_t(out_ref_s, in_ref_s, perm_ref, vals_ref, du_ref, w_ref,
+                    out_ref, acc_ref):
+    """Grid: (n_tiles,), column-major tile walk (see `_kernel_t`). Each slot
+    transforms its du row block to F_in as a PROLOGUE (du @ Wᵀ via
+    dot_general over the F_out axes of both operands — no transposed W is
+    materialized) and contracts the tile transposed against the result, so
+    the (rows, F_in) dz intermediate never exists in HBM. A row block
+    revisited by k tiles pays the prologue k times — MXU FLOPs traded for
+    an HBM round-trip, priced by the `analysis.cost` ordering model."""
+    t = pl.program_id(0)
+
+    first_of_run = jnp.logical_or(
+        t == 0, out_ref_s[t] != out_ref_s[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first_of_run)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dz = jax.lax.dot_general(           # (TILE, F_out) @ (F_in, F_out)ᵀ
+        du_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        vals_ref[...], dz,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    last = t == pl.num_programs(0) - 1
+    last_of_run = jnp.logical_or(
+        last, out_ref_s[t] != out_ref_s[jnp.minimum(t + 1,
+                                                    pl.num_programs(0) - 1)])
+
+    @pl.when(last_of_run)
+    def _():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def spmm_block_sparse_fused_t(t_out, t_in, t_perm, tile_vals, du, w,
+                              num_cols: int, interpret: bool | None = None):
+    """Fused δcomb = Pᵀ_blocksparse · (du @ wᵀ), reusing forward tiles.
+
+    du: (R, F_out), w: (F_in, F_out); R and num_cols multiples of TILE,
+    F_in/F_out multiples of FEAT_BLOCK. The transpose stream (t_out sorted,
+    ≥1 tile per column block via zero fillers) is the same one
+    `spmm_block_sparse_t` consumes.
+    """
+    n_tiles = t_out.shape[0]
+    fout = du.shape[1]
+    fin = w.shape[0]
+    assert w.shape[1] == fout
+    assert fin % FEAT_BLOCK == 0 and fout % FEAT_BLOCK == 0
+    assert num_cols % TILE == 0
+
+    return pl.pallas_call(
+        _kernel_fused_t,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,      # t_out, t_in, t_perm
+            grid=(n_tiles,),
+            in_specs=[
+                pl.BlockSpec((None, TILE, TILE),
+                             lambda t, to, ti, tp: (tp[t], 0, 0)),
+                pl.BlockSpec((TILE, fout),
+                             lambda t, to, ti, tp: (ti[t], 0)),
+                pl.BlockSpec((fin, fout), lambda t, to, ti, tp: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((TILE, fin),
+                                   lambda t, to, ti, tp: (to[t], 0)),
+            scratch_shapes=[pltpu.VMEM((TILE, fin), _acc_dtype(du.dtype))],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_cols, fin), du.dtype),
+        interpret=resolve_interpret(interpret),
+    )(t_out, t_in, t_perm, tile_vals, du, w)
 
 
 # ----------------------------------------------------------------------
@@ -227,8 +439,18 @@ def build_tile_topology(row, col, val, num_rows: int, num_cols: int,
     ncb = -(-num_cols // tile)
     key = (row // tile) * ncb + (col // tile)
     uk, inv = np.unique(key, return_inverse=True)
-    vals = np.zeros((len(uk), tile, tile), np.float32)
-    np.add.at(vals, (inv, row % tile, col % tile), val)
+    # Scatter-add over FLATTENED (tile, r%T, c%T) keys into a flat f32
+    # buffer: multi-index np.add.at was the preprocessing bottleneck at
+    # large nnz (2-10x slower — the fancy-index ufunc loop), and
+    # np.bincount(weights=...) loses to the flat add.at on every measured
+    # regime because it allocates an f64 output of n_tiles·T² bins before
+    # the f32 cast (see benchmarks/bench_kernels.run_tile_extraction).
+    # Duplicate (r, c) entries still sum, matching COO semantics.
+    flat = (inv.astype(np.int64) * (tile * tile)
+            + (row % tile) * tile + (col % tile))
+    vals = np.zeros(len(uk) * tile * tile, np.float32)
+    np.add.at(vals, flat, val)
+    vals = vals.reshape(len(uk), tile, tile)
     rows = (uk // ncb).astype(np.int32)
     cols = (uk % ncb).astype(np.int32)
 

@@ -13,10 +13,9 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import gcn_spmm as _spmm
 
 
-def _auto_interpret(interpret):
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
+# Single source of truth for the auto-detect lives next to the kernels, so
+# direct callers of gcn_spmm.py get the same resolution as these wrappers.
+_auto_interpret = _spmm.resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("num_rows", "interpret"))
@@ -24,8 +23,7 @@ def spmm(tile_rows, tile_cols, tile_vals, h, num_rows: int,
          interpret: bool | None = None):
     """Block-sparse aggregation z = P·h (see gcn_spmm.py)."""
     return _spmm.spmm_block_sparse(tile_rows, tile_cols, tile_vals, h,
-                                   num_rows,
-                                   interpret=_auto_interpret(interpret))
+                                   num_rows, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("num_cols", "interpret"))
@@ -33,8 +31,26 @@ def spmm_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
            interpret: bool | None = None):
     """Block-sparse transpose aggregation δcomb = Pᵀ·δz (see gcn_spmm.py)."""
     return _spmm.spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz,
-                                     num_cols,
-                                     interpret=_auto_interpret(interpret))
+                                     num_cols, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("num_rows", "relu", "with_z", "interpret"))
+def spmm_fused(tile_rows, tile_cols, tile_vals, h, w, b, num_rows: int,
+               relu: bool = False, with_z: bool = True,
+               interpret: bool | None = None):
+    """Fused u = (P·h)@w + b (+ReLU), z optional (see gcn_spmm.py)."""
+    return _spmm.spmm_block_sparse_fused(tile_rows, tile_cols, tile_vals,
+                                         h, w, b, num_rows, relu=relu,
+                                         with_z=with_z, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("num_cols", "interpret"))
+def spmm_fused_t(t_out, t_in, t_perm, tile_vals, du, w, num_cols: int,
+                 interpret: bool | None = None):
+    """Fused δcomb = Pᵀ·(du@wᵀ), prologue matmul (see gcn_spmm.py)."""
+    return _spmm.spmm_block_sparse_fused_t(t_out, t_in, t_perm, tile_vals,
+                                           du, w, num_cols,
+                                           interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "q_block", "kv_block",

@@ -46,7 +46,7 @@ def run_gcn(args) -> dict:
                      num_classes=pipeline.dataset.num_classes,
                      dropout=tpl["dropout"],
                      multilabel=pipeline.dataset.multilabel,
-                     agg=args.agg)
+                     agg=args.agg, matmul_order=args.matmul_order)
     import dataclasses
     pc = dataclasses.replace(PipeConfig.named(args.variant, gamma=args.gamma),
                              fuse_exchange=not args.no_fuse_exchange)
@@ -58,6 +58,7 @@ def run_gcn(args) -> dict:
            "spmd": bool(args.spmd),
            "parts_per_device": args.parts_per_device,
            "agg": args.agg,
+           "matmul_order": args.matmul_order,
            "fuse_exchange": pc.fuse_exchange,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
@@ -124,8 +125,16 @@ def main():
     ap.add_argument("--variant", default="pipegcn",
                     help="vanilla|pipegcn|pipegcn-g|pipegcn-f|pipegcn-gf")
     ap.add_argument("--gcn-kind", default="sage", choices=["sage", "gcn"])
-    ap.add_argument("--agg", default="coo", choices=["coo", "blocksparse"],
-                    help="aggregation engine for the Eq. 3/4 SpMM")
+    ap.add_argument("--agg", default="coo",
+                    choices=["coo", "blocksparse", "fused"],
+                    help="aggregation engine for the Eq. 3/4 SpMM (fused = "
+                         "blocksparse tiles + single-pass aggregate+"
+                         "transform Pallas kernels)")
+    ap.add_argument("--matmul-order", default="auto",
+                    choices=["auto", "aggregate-first", "transform-first"],
+                    help="layer contraction order for P·H·W: (P·H)·W costs "
+                         "2·nnz·F_in, P·(H·W) costs 2·nnz·F_out; auto picks "
+                         "per layer via the static FLOP model")
     ap.add_argument("--spmd", action="store_true",
                     help="run the step under shard_map on a device mesh "
                          "instead of the single-device sim backend")

@@ -1,8 +1,11 @@
 """Analytic cost model sanity: parameter counts vs known model sizes, FLOPs
-vs 6·N·D for dense training, cache sizing."""
+vs 6·N·D for dense training, cache sizing — plus the GCN matmul-ordering
+model (hand-computed FLOP oracles for F_in ≠ F_out layers)."""
 import pytest
 
-from repro.analysis.cost import analytic_cost, _cache_bytes
+from repro.analysis.cost import (analytic_cost, _cache_bytes,
+                                 choose_gcn_orders, gcn_layer_order_cost,
+                                 gcn_order_report)
 from repro.configs import get_arch
 from repro.models.config import INPUT_SHAPES
 
@@ -57,3 +60,80 @@ def test_mla_cache_much_smaller_than_mha():
 def test_ssm_cache_constant_in_length():
     cfg = get_arch("mamba2-780m")
     assert _cache_bytes(cfg, 1, 1024) == _cache_bytes(cfg, 1, 524288)
+
+
+# ---------------------------------------------------------------------
+# GCN matmul-ordering model (aggregate-first vs transform-first)
+# ---------------------------------------------------------------------
+
+# Hand-computed oracle for fin=4, fout=2, n=8 inner rows, c=12 combined
+# rows, e=10 effective sparse multiply-adds per feature column:
+#
+# aggregate-first (z = P·comb then z@w):
+#   fwd:  spmm 2·e·fin = 80          transform 2·n·fin·fout = 128
+#   bwd:  gw = zᵀdu     128          dz = du@wᵀ 128      spmm_t   80
+# transform-first (comb@w then P·(comb@w)):
+#   fwd:  transform 2·c·fin·fout = 192               spmm 2·e·fout = 40
+#   bwd:  dhw = Pᵀdu 40      gw = combᵀdhw 192       dcomb = dhw@wᵀ 192
+
+DIMS = dict(fin=4, fout=2, num_rows=8, combined=12, nnz_eff=10)
+
+
+def test_gcn_order_flops_hand_computed_train():
+    a = gcn_layer_order_cost("aggregate-first", **DIMS)
+    b = gcn_layer_order_cost("transform-first", **DIMS)
+    assert a.flops == 80 + 128 + 128 + 128 + 80 == 544
+    assert b.flops == 192 + 40 + 40 + 192 + 192 == 656
+
+
+def test_gcn_order_flops_hand_computed_first_layer():
+    """Alg. 1 stops the backward at layer 0: aggregate-first drops its
+    backward SpMM + dz entirely; transform-first still pays Pᵀ·du for gw."""
+    a = gcn_layer_order_cost("aggregate-first", first_layer=True, **DIMS)
+    b = gcn_layer_order_cost("transform-first", first_layer=True, **DIMS)
+    assert a.flops == 80 + 128 + 128 == 336
+    assert b.flops == 192 + 40 + 40 + 192 == 464
+
+
+def test_gcn_order_flops_hand_computed_eval():
+    a = gcn_layer_order_cost("aggregate-first", train=False, **DIMS)
+    b = gcn_layer_order_cost("transform-first", train=False, **DIMS)
+    assert a.flops == 80 + 128 == 208
+    assert b.flops == 192 + 40 == 232
+
+
+def test_gcn_order_fused_prologue_recompute():
+    """Fused aggregate-first: dz is recomputed per tile slot (e/tile rows)
+    instead of once per row block (n rows)."""
+    a = gcn_layer_order_cost("aggregate-first", fused=True, tile=128, **DIMS)
+    dz = 2.0 * (10 / 128) * 4 * 2
+    assert a.flops == 80 + 128 + 128 + dz + 80
+
+
+def test_gcn_order_unknown_rejected():
+    with pytest.raises(ValueError, match="order"):
+        gcn_layer_order_cost("sideways", **DIMS)
+
+
+def test_choose_orders_prefers_aggregate_first_on_square_layers():
+    """fin == fout: (P·H)·W is never more expensive (n < c strictly)."""
+    dims = [(64, 64)] * 3
+    assert choose_gcn_orders(dims, 128, 256, 10_000) == \
+        ("aggregate-first",) * 3
+
+
+def test_choose_orders_flips_on_shrinking_layer():
+    """A wide→narrow classifier layer with heavy sparse work: transform
+    first shrinks the SpMM from 2·e·256 to 2·e·8."""
+    dims = [(64, 256), (256, 8)]
+    orders = choose_gcn_orders(dims, 128, 256, 1_000_000)
+    assert orders[1] == "transform-first"
+    # expanding layer: aggregating 64-wide features first is cheaper
+    assert orders[0] == "aggregate-first"
+
+
+def test_gcn_order_report_chosen_is_argmin():
+    rep = gcn_order_report([(32, 64), (64, 16)], 100, 220, 50_000)
+    for r in rep:
+        best = min(r["costs"].values(), key=lambda c: c.flops)
+        assert r["costs"][r["chosen"]].flops == best.flops

@@ -1,0 +1,321 @@
+"""Fused aggregate+transform engine: dense-oracle parity for both fused
+kernels (epilogue forward incl. bias/ReLU/with_z, prologue transpose),
+engine-level handling of non-multiple-of-128 shapes, empty row/col blocks
+(zero-filler flush through the fused path), float64 1e-12 parity vs the COO
+engine for GCN and SAGE (subprocess, x64), and a jaxpr gate pinning ONE
+pallas_call per layer direction on the fused path."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN, shard_data, topology_from
+from repro.core.trace_utils import count_primitives
+from repro.graph import (build_partitioned_graph, make_dataset,
+                         partition_graph)
+from repro.graph.csr import mean_normalized, sym_normalized
+from repro.kernels.aggregate import get_engine
+from repro.kernels.gcn_spmm import (TILE, build_tile_topology,
+                                    spmm_block_sparse_fused,
+                                    spmm_block_sparse_fused_t)
+
+ATOL = 5e-5
+
+
+def _random_block_sparse(rng, R, C, density=0.05):
+    dense = ((rng.random((R, C)) < density)
+             * rng.normal(size=(R, C))).astype(np.float32)
+    row, col = np.nonzero(dense)
+    tt = build_tile_topology(row, col, dense[row, col], R, C)
+    return dense, tt
+
+
+def _tslice(tt):
+    return (jnp.asarray(tt.rows), jnp.asarray(tt.cols),
+            jnp.asarray(tt.vals), jnp.asarray(tt.t_out),
+            jnp.asarray(tt.t_in), jnp.asarray(tt.t_perm))
+
+
+# ---------------------------------------------------------------------
+# Kernel-level dense-oracle parity
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("with_z", [True, False])
+def test_fused_forward_matches_dense(relu, with_z):
+    rng = np.random.default_rng(0)
+    R, C, FI, FO = 3 * TILE, 2 * TILE, 128, 256
+    dense, tt = _random_block_sparse(rng, R, C)
+    h = jnp.asarray(rng.normal(size=(C, FI)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(FI, FO)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, FO)), jnp.float32)
+    u, z = spmm_block_sparse_fused(
+        jnp.asarray(tt.rows), jnp.asarray(tt.cols), jnp.asarray(tt.vals),
+        h, w, b, R, relu=relu, with_z=with_z)
+    zd = dense @ np.asarray(h)
+    want = zd @ np.asarray(w) + np.asarray(b)
+    if relu:
+        want = np.maximum(want, 0)
+    np.testing.assert_allclose(np.asarray(u), want, atol=2e-3)
+    if with_z:
+        np.testing.assert_allclose(np.asarray(z), zd, atol=2e-4)
+    else:
+        assert z is None
+
+
+def test_fused_transpose_matches_dense():
+    """dcomb = Pᵀ·(du @ wᵀ) from the prologue kernel == dense oracle."""
+    rng = np.random.default_rng(1)
+    R, C, FI, FO = 2 * TILE, 3 * TILE, 256, 128
+    dense, tt = _random_block_sparse(rng, R, C)
+    du = jnp.asarray(rng.normal(size=(R, FO)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(FI, FO)), jnp.float32)
+    got = spmm_block_sparse_fused_t(
+        jnp.asarray(tt.t_out), jnp.asarray(tt.t_in), jnp.asarray(tt.t_perm),
+        jnp.asarray(tt.vals), du, w, C)
+    want = dense.T @ (np.asarray(du) @ np.asarray(w).T)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-3)
+
+
+def test_fused_empty_row_and_col_blocks():
+    """Empty row blocks must flush u = b (z = 0 ⇒ u = 0@W + b, matching the
+    dense math) and empty column blocks must flush dcomb = 0 — both via the
+    zero-filler tiles build_tile_topology appends."""
+    rng = np.random.default_rng(2)
+    R = C = 3 * TILE
+    FI = FO = 128
+    dense = np.zeros((R, C), np.float32)
+    # only (row-block 0, col-block 2): row blocks 1-2 / col blocks 0-1 empty
+    dense[:TILE, 2 * TILE:] = (rng.random((TILE, TILE)) < 0.1) * 1.0
+    row, col = np.nonzero(dense)
+    tt = build_tile_topology(row, col, dense[row, col], R, C)
+    h = jnp.asarray(rng.normal(size=(C, FI)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(FI, FO)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, FO)), jnp.float32)
+    u, z = spmm_block_sparse_fused(
+        jnp.asarray(tt.rows), jnp.asarray(tt.cols), jnp.asarray(tt.vals),
+        h, w, b, R)
+    want = (dense @ np.asarray(h)) @ np.asarray(w) + np.asarray(b)
+    np.testing.assert_allclose(np.asarray(u), want, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(u)[TILE:],
+                               np.broadcast_to(np.asarray(b), (2 * TILE, FO)),
+                               atol=1e-6)
+    assert np.all(np.asarray(z)[TILE:] == 0)
+    du = jnp.asarray(rng.normal(size=(R, FO)), jnp.float32)
+    d = spmm_block_sparse_fused_t(
+        jnp.asarray(tt.t_out), jnp.asarray(tt.t_in), jnp.asarray(tt.t_perm),
+        jnp.asarray(tt.vals), du, w, C)
+    np.testing.assert_allclose(
+        np.asarray(d), dense.T @ (np.asarray(du) @ np.asarray(w).T),
+        atol=2e-3)
+    assert np.all(np.asarray(d)[:2 * TILE] == 0)
+
+
+def test_fused_engine_nonmultiple_shapes():
+    """The engine pads/slices: rows, combined and both feature widths far
+    from 128-multiples must round-trip exactly against the dense oracle."""
+    rng = np.random.default_rng(3)
+    R, C, FI, FO = 200, 300, 40, 24
+    dense, tt = _random_block_sparse(rng, R, C, density=0.15)
+    eng = get_engine("fused")
+    ts = _tslice(tt)
+    comb = jnp.asarray(rng.normal(size=(C, FI)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(FI, FO)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(FO,)), jnp.float32)
+    u, z = eng.aggregate_transform(ts, comb, w, b, R)
+    assert u.shape == (R, FO) and z.shape == (R, FI)
+    zd = dense @ np.asarray(comb)
+    np.testing.assert_allclose(np.asarray(z), zd, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(u),
+                               zd @ np.asarray(w) + np.asarray(b),
+                               atol=2e-3)
+    du = jnp.asarray(rng.normal(size=(R, FO)), jnp.float32)
+    d = eng.aggregate_transform_t(ts, du, w, C)
+    assert d.shape == (C, FI)
+    np.testing.assert_allclose(
+        np.asarray(d), dense.T @ (np.asarray(du) @ np.asarray(w).T),
+        atol=2e-3)
+
+
+# ---------------------------------------------------------------------
+# Train-step parity (f32 in-process; f64 1e-12 vs coo in a subprocess)
+# ---------------------------------------------------------------------
+
+def setup(kind, parts=4, layers=3, hidden=16):
+    ds = make_dataset("tiny")
+    norm = sym_normalized if kind == "gcn" else mean_normalized
+    pg = build_partitioned_graph(norm(ds.graph),
+                                 partition_graph(ds.graph, parts, seed=0),
+                                 parts)
+    topo = topology_from(pg, with_tiles=True)
+    mc = ModelConfig(kind=kind, feat_dim=ds.feat_dim, hidden=hidden,
+                     num_layers=layers, num_classes=ds.num_classes,
+                     dropout=0.0)
+    data = shard_data(pg, ds.features, ds.labels, ds.train_mask, ds.val_mask)
+    return ds, pg, topo, mc, data
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage"])
+@pytest.mark.parametrize("order", ["aggregate-first", "transform-first",
+                                   "auto"])
+def test_fused_train_step_parity(kind, order):
+    """Fused engine × every matmul ordering vs the COO reference, loss +
+    every weight gradient + logits, over two steps of the stale pipeline."""
+    ds, pg, topo, mc, data = setup(kind)
+    pipe = PipeConfig.named("pipegcn")
+    out = {}
+    for agg in ("coo", "fused"):
+        model = PipeGCN(dataclasses.replace(mc, agg=agg, matmul_order=order),
+                        pipe)
+        params = model.init_params(jax.random.PRNGKey(0))
+        bufs = model.init_buffers(topo)
+        for t in range(2):
+            loss, grads, bufs, logits = model.train_step(
+                topo, params, bufs, data, jax.random.PRNGKey(t))
+        out[agg] = (float(loss), grads, np.asarray(logits))
+    assert abs(out["coo"][0] - out["fused"][0]) < ATOL
+    for k in out["coo"][1]:
+        np.testing.assert_allclose(np.asarray(out["coo"][1][k]),
+                                   np.asarray(out["fused"][1][k]),
+                                   atol=ATOL, err_msg=f"{kind} {order} {k}")
+    np.testing.assert_allclose(out["coo"][2], out["fused"][2], atol=ATOL)
+
+
+def test_fused_eval_forward_matches_coo():
+    """The eval path (with_z=False + in-kernel ReLU epilogue for GCN)."""
+    ds, pg, topo, mc, data = setup("gcn")
+    params = PipeGCN(mc, PipeConfig.vanilla()).init_params(
+        jax.random.PRNGKey(0))
+    outs = {}
+    for agg in ("coo", "fused"):
+        model = PipeGCN(dataclasses.replace(mc, agg=agg),
+                        PipeConfig.named("pipegcn"))
+        loss, logits = model.forward(topo, params, data)
+        outs[agg] = (float(loss), np.asarray(logits))
+    assert abs(outs["coo"][0] - outs["fused"][0]) < ATOL
+    np.testing.assert_allclose(outs["coo"][1], outs["fused"][1], atol=ATOL)
+
+
+F64_SCRIPT = textwrap.dedent("""
+    import dataclasses, jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp, numpy as np
+    from repro.core.config import ModelConfig, PipeConfig
+    from repro.core.pipegcn import PipeGCN, topology_from, shard_data
+    from repro.graph import (make_dataset, partition_graph,
+                             build_partitioned_graph)
+    from repro.graph.csr import mean_normalized, sym_normalized
+
+    for kind, norm in (("gcn", sym_normalized), ("sage", mean_normalized)):
+        ds = make_dataset("tiny")
+        pg = build_partitioned_graph(
+            norm(ds.graph), partition_graph(ds.graph, 4, seed=0), 4)
+        topo = topology_from(pg, with_tiles=True)
+        topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+        data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                          ds.train_mask, ds.val_mask)
+        data = data._replace(x=data.x.astype(jnp.float64))
+        mc = ModelConfig(kind=kind, feat_dim=ds.feat_dim, hidden=16,
+                         num_layers=3, num_classes=ds.num_classes,
+                         dropout=0.0)
+        for order in ("aggregate-first", "auto"):
+            out = {}
+            for agg in ("coo", "fused"):
+                m = PipeGCN(dataclasses.replace(mc, agg=agg,
+                                                matmul_order=order),
+                            PipeConfig.named("pipegcn-gf", gamma=0.9))
+                params = m.init_params(jax.random.PRNGKey(0),
+                                       dtype=jnp.float64)
+                bufs = m.init_buffers(topo, dtype=jnp.float64)
+                for t in range(3):
+                    loss, grads, bufs, _ = m.train_step(
+                        topo, params, bufs, data, jax.random.PRNGKey(t))
+                out[agg] = (float(loss), grads, bufs)
+            dl = abs(out["coo"][0] - out["fused"][0])
+            dg = max(float(jnp.abs(out["coo"][1][k]
+                                   - out["fused"][1][k]).max())
+                     for k in out["coo"][1])
+            db = max(float(jnp.abs(a - b).max()) for a, b in
+                     zip(jax.tree.leaves(out["coo"][2]),
+                         jax.tree.leaves(out["fused"][2])))
+            assert dl < 1e-12 and dg < 1e-12 and db < 1e-12, \\
+                (kind, order, dl, dg, db)
+            print(f"OK {kind}/{order}", flush=True)
+    print("FUSED-F64-OK")
+""")
+
+
+def test_fused_f64_parity_vs_coo_subprocess():
+    """x64 needs its own process (the flag is global): the fused engine
+    keeps the caller's dtype end to end, so in f64 interpret mode it must
+    match the COO engine at 1e-12 — loss, grads, AND pipeline buffers."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", F64_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "FUSED-F64-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------
+# Jaxpr gate: the fused path emits ONE pallas_call per layer direction
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("layers", [2, 3])
+def test_fused_path_one_pallas_call_per_layer_direction(layers):
+    """Train: L forward fused kernels + (L-1) backward fused transpose
+    kernels (layer 0 sends no dcomb under aggregate-first) = 2L-1
+    pallas_calls. A second pallas_call appearing per layer means an
+    aggregation op escaped the fusion."""
+    ds, pg, topo, mc, data = setup("gcn", layers=layers)
+    model = PipeGCN(dataclasses.replace(
+        mc, agg="fused", matmul_order="aggregate-first"),
+        PipeConfig.named("pipegcn"))
+    params = model.init_params(jax.random.PRNGKey(0))
+    bufs = model.init_buffers(topo)
+    jx = jax.make_jaxpr(
+        lambda p, b: model.train_step(topo, p, b, data,
+                                      jax.random.PRNGKey(0)))(params, bufs)
+    got = count_primitives(jx, ("pallas_call",))["pallas_call"]
+    assert got == 2 * layers - 1, (layers, got)
+
+
+def test_fused_eval_one_pallas_call_per_layer():
+    ds, pg, topo, mc, data = setup("gcn", layers=3)
+    model = PipeGCN(dataclasses.replace(
+        mc, agg="fused", matmul_order="aggregate-first"),
+        PipeConfig.named("pipegcn"))
+    params = model.init_params(jax.random.PRNGKey(0))
+    jx = jax.make_jaxpr(
+        lambda p: model.forward(topo, p, data))(params)
+    got = count_primitives(jx, ("pallas_call",))["pallas_call"]
+    assert got == 3, got
+
+
+# ---------------------------------------------------------------------
+# Config plumbing
+# ---------------------------------------------------------------------
+
+def test_unknown_matmul_order_rejected():
+    with pytest.raises(ValueError, match="matmul_order"):
+        ModelConfig(matmul_order="sideways")
+
+
+def test_fused_engine_without_tiles_raises():
+    ds, pg, topo, mc, data = setup("gcn")
+    topo_no_tiles = topology_from(pg)
+    model = PipeGCN(dataclasses.replace(mc, agg="fused"),
+                    PipeConfig.vanilla())
+    params = model.init_params(jax.random.PRNGKey(0))
+    bufs = model.init_buffers(topo_no_tiles)
+    with pytest.raises(ValueError, match="fused"):
+        model.train_step(topo_no_tiles, params, bufs, data,
+                         jax.random.PRNGKey(0))

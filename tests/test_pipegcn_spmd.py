@@ -2,25 +2,28 @@
 parameterized matrix:
 
     (variant  ∈ {vanilla, pipegcn, pipegcn-gf})
-  × (agg      ∈ {coo, blocksparse})
+  × (agg      ∈ {coo, blocksparse, fused})
   × (n_local  ∈ {1, 2, 4})      # co-resident partitions per device, P = 8
 
 plus coverage cells the matrix alone misses: bf16 boundary compression and
 k-step staleness FIFOs under the SPMD backend (both previously exercised
-only by the sim tests), the production flattened-2D-axes layout, and the
+only by the sim tests), the production flattened-2D-axes layout, the
 fused-deferred exchange (fuse_exchange × {agg, n_local, compression,
-staleness-depth, smoothing}).
+staleness-depth, smoothing}), and the matmul-ordering knob
+(transform-first / cost-model auto) on the fused engine.
 
 Every cell asserts 1e-12 float64 parity vs the sim backend for the loss,
 every weight gradient, and every pipeline buffer, over >=3 steps. The sim
-reference ALWAYS runs the blocking per-layer schedule (fuse_exchange=False),
-while the SPMD side runs the cell's schedule (fused by default) — so every
-stale cell is simultaneously a cross-backend and a fused-vs-unfused parity
-check. The whole
+reference ALWAYS runs the blocking per-layer schedule (fuse_exchange=False)
+and, for `agg="fused"` cells, the COO engine — the fused engine computes in
+the caller's dtype (f64 here), so those cells are simultaneously a
+cross-backend, a cross-schedule, AND a cross-ENGINE 1e-12 exactness check
+of the fused Pallas kernels against segment_sum. (Plain blocksparse casts
+to f32 internally, so its cells compare same-engine only.) The whole
 matrix runs in ONE subprocess so it alone sees 8 forced host devices; the
 rest of the suite keeps the single real device. One dataset/partitioning is
 built per process and the Topology carries tile streams alongside the COO
-shards, so both engines (and every n_local) run on identical inputs.
+shards, so every engine (and every n_local) runs on identical inputs.
 """
 import os
 import subprocess
@@ -29,10 +32,11 @@ import textwrap
 
 import pytest
 
-# Cells are (variant, agg, n_local, pipe overrides, axis layout). Edit here.
+# Cells are (variant, agg, n_local, overrides, axis layout); overrides are
+# PipeConfig fields plus the optional "matmul_order" ModelConfig field.
 MATRIX = [(v, a, nl, {}, "1d")
           for v in ("vanilla", "pipegcn", "pipegcn-gf")
-          for a in ("coo", "blocksparse")
+          for a in ("coo", "blocksparse", "fused")
           for nl in (1, 2, 4)]
 EXTRA = [
     # bf16 boundary compression under SPMD (cast happens before/after the
@@ -65,6 +69,19 @@ EXTRA = [
     ("pipegcn", "coo", 2,
      {"fuse_exchange": True, "staleness_steps": 3}, "1d"),
     ("pipegcn", "coo", 2, {"fuse_exchange": True}, "2d"),
+    # fused aggregate+transform engine (tentpole): its cells compare
+    # against a COO sim reference (cross-engine f64 exactness), crossed
+    # with compression, staleness depth, the 2-D axis layout, and both
+    # non-default matmul orderings (transform-first routes the layer
+    # through the plain SpMM after a dense transform; auto mixes per
+    # layer via the static cost model).
+    ("pipegcn", "fused", 2, {"compress_boundary": True}, "1d"),
+    ("pipegcn", "fused", 4, {"staleness_steps": 2}, "1d"),
+    ("pipegcn-g", "fused", 2, {"fuse_exchange": True}, "1d"),
+    ("pipegcn", "fused", 2, {"matmul_order": "transform-first"}, "1d"),
+    ("pipegcn", "fused", 4, {"matmul_order": "auto"}, "1d"),
+    ("vanilla", "fused", 2, {"matmul_order": "auto"}, "1d"),
+    ("pipegcn", "fused", 2, {}, "2d"),
 ]
 
 SCRIPT = textwrap.dedent("""
@@ -95,15 +112,21 @@ SCRIPT = textwrap.dedent("""
     data = data._replace(x=data.x.astype(jnp.float64))
 
     def run(variant, agg, n_local, pipe_kw, axis_spec, steps=3):
+        pipe_kw = dict(pipe_kw)
+        mo = pipe_kw.pop("matmul_order", "aggregate-first")
         mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
                          num_layers=3, num_classes=ds.num_classes,
-                         dropout=0.0, agg=agg)
+                         dropout=0.0, agg=agg, matmul_order=mo)
         pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.9),
                                  **pipe_kw)
         # The sim reference always runs the blocking per-layer schedule;
         # the SPMD model runs the cell's (fused by default). The schedules
         # are bit-identical by construction, so parity must stay 1e-12.
-        ref = PipeGCN(mc, dataclasses.replace(pc, fuse_exchange=False))
+        # For the fused engine the reference additionally switches to the
+        # COO engine: both run in f64 here, so the cell doubles as a
+        # cross-engine exactness check of the fused Pallas kernels.
+        ref_mc = dataclasses.replace(mc, agg="coo") if agg == "fused" else mc
+        ref = PipeGCN(ref_mc, dataclasses.replace(pc, fuse_exchange=False))
         model = PipeGCN(mc, pc)
         params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
         b_sim = model.init_buffers(topo, dtype=jnp.float64)
@@ -129,7 +152,7 @@ SCRIPT = textwrap.dedent("""
             for a, b in zip(jax.tree.leaves(b_sim), jax.tree.leaves(b_spmd)):
                 d = float(jnp.abs(a - jnp.asarray(b)).max())
                 assert d < 1e-12, ("buffers", cell, t, d)
-        print(f"OK {variant}/{agg}/nl{n_local}/{axis_spec}/{pipe_kw}",
+        print(f"OK {variant}/{agg}/{mo}/nl{n_local}/{axis_spec}/{pipe_kw}",
               flush=True)
 
     import json, sys
