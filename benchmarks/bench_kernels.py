@@ -1,14 +1,16 @@
 """Kernel microbenchmarks: block-sparse SpMM (forward + transpose) vs the
 COO segment_sum engine on the same partition shard, the FUSED
 aggregate+transform kernels vs the composed two-op path, the offline tile
-extraction, and flash attention (interpret mode on CPU — correctness +
-tile statistics; wall numbers are CPU-only)."""
+extraction, the locality-aware reorder sweep (natural vs rcm tile counts —
+gated), the vectorized-partitioner build-time record, and flash attention
+(interpret mode on CPU — correctness + tile statistics; wall numbers are
+CPU-only)."""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_meta, time_fn
 from repro.kernels.gcn_spmm import TILE, build_tile_topology, tile_density
 from repro.kernels import ops
 from repro.kernels.aggregate import get_engine
@@ -119,6 +121,110 @@ def run_tile_extraction(quick: bool):
     return dt
 
 
+def run_reorder_sweep(quick: bool):
+    """Natural vs rcm layout on the synthetic power-law benchmark graph:
+    the nonempty-tile frontier the block-sparse engines pay for, plus
+    bandwidth / halo-run-count from `analysis.cost.graph_layout_report`.
+
+    GATED twice: rcm must NEVER store more nonempty tiles than natural
+    (any partition count), and on the designated power-law graph
+    (reddit-sim, >=4 partitions — heavy-tailed R-MAT overlay) the
+    reduction must hold >=15% (the PR-5 acceptance bar; measured 16-22%
+    at p4-p8). The record lands in BENCH_*.json via emit + emit_meta."""
+    from repro.analysis.cost import graph_layout_report
+    from repro.graph import make_dataset, partition_graph
+    from repro.graph.csr import mean_normalized
+    from repro.graph.halo import build_partitioned_graph
+
+    cases = [("reddit-sim", 4)] if quick else [("reddit-sim", 4),
+                                               ("reddit-sim", 8),
+                                               ("products-sim", 8)]
+    import time
+    out = {}
+    for name, parts in cases:
+        ds = make_dataset(name)
+        prop = mean_normalized(ds.graph)
+        part = partition_graph(ds.graph, parts, seed=0)
+        reports = {}
+        for layout in ("natural", "rcm"):
+            t0 = time.perf_counter()
+            pg = build_partitioned_graph(prop, part, parts, layout=layout)
+            dt = time.perf_counter() - t0
+            rep = graph_layout_report(pg)
+            reports[layout] = rep
+            emit(f"kernels/reorder/{name}/p{parts}/{layout}", dt * 1e6,
+                 f"tiles={rep['tiles']},bandwidth={rep['bandwidth']},"
+                 f"halo_runs={rep['halo_runs']},"
+                 f"mean_bandwidth={rep['mean_bandwidth']:.1f}")
+        tn, tr = reports["natural"]["tiles"], reports["rcm"]["tiles"]
+        reduction = (tn - tr) / tn
+        emit(f"kernels/reorder/{name}/p{parts}/reduction", reduction * 100,
+             f"tiles_natural={tn},tiles_rcm={tr}")
+        emit_meta("reorder_tiles", {f"{name}/p{parts}": {
+            "natural": tn, "rcm": tr, "reduction": round(reduction, 4),
+            "bandwidth_natural": reports["natural"]["bandwidth"],
+            "bandwidth_rcm": reports["rcm"]["bandwidth"],
+            "halo_runs_natural": reports["natural"]["halo_runs"],
+            "halo_runs_rcm": reports["rcm"]["halo_runs"]}})
+        assert tr <= tn, (
+            f"rcm layout stores MORE tiles than natural on {name}/p{parts}: "
+            f"{tr} vs {tn}")
+        if name == "reddit-sim":
+            assert reduction >= 0.15, (
+                f"rcm tile reduction regressed below the 15% acceptance "
+                f"bar on {name}/p{parts}: {reduction:.1%} ({tn} -> {tr})")
+        out[(name, parts)] = reduction
+    return out
+
+
+def run_partition_build(quick: bool):
+    """Build-time record for the vectorized partitioner: partition_graph's
+    numpy frontier expansion + delta-updated refinement vs the per-node
+    Python loop references they replaced (kept in repro.graph.partition as
+    `_bfs_grow_loop`/`_refine_loop` — bit-identical output, verified here
+    and in tests/test_reorder.py). Always measured on papers100m-sim (the
+    largest synthetic graph — the regime where the loop baseline dominated
+    pipeline build time; at reddit-sim scale refine is noise-bound and the
+    record would under-sell the bfs win), with the two phases recorded
+    separately so each speedup is attributed."""
+    from repro.graph import make_dataset
+    from repro.graph.partition import (_bfs_grow, _bfs_grow_loop, _refine,
+                                       _refine_loop)
+    import time
+    name, parts = "papers100m-sim", 8
+    g = make_dataset(name).graph
+    reps = 1 if quick else 3
+
+    def t_of(fn):
+        best, out = float("inf"), None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    t_bfs, part_v = t_of(lambda: _bfs_grow(g, parts,
+                                           np.random.default_rng(0)))
+    t_bfs_l, part_l = t_of(lambda: _bfs_grow_loop(g, parts,
+                                                  np.random.default_rng(0)))
+    assert np.array_equal(part_v, part_l), "vectorized _bfs_grow drifted"
+    t_ref, ref_v = t_of(lambda: _refine(g, part_v, parts, 4, 0.05))
+    t_ref_l, ref_l = t_of(lambda: _refine_loop(g, part_l, parts, 4, 0.05))
+    assert np.array_equal(ref_v, ref_l), "vectorized _refine drifted"
+    for phase, tv, tl in (("bfs", t_bfs, t_bfs_l),
+                          ("refine", t_ref, t_ref_l)):
+        emit(f"kernels/partition_build/{name}/p{parts}/{phase}", tv * 1e6,
+             f"loop_us={tl * 1e6:.0f},speedup={tl / tv:.2f}x")
+    total_v, total_l = t_bfs + t_ref, t_bfs_l + t_ref_l
+    emit(f"kernels/partition_build/{name}/p{parts}/total", total_v * 1e6,
+         f"loop_us={total_l * 1e6:.0f},speedup={total_l / total_v:.2f}x")
+    emit_meta("partition_build", {f"{name}/p{parts}": {
+        "bfs_s": round(t_bfs, 4), "bfs_loop_s": round(t_bfs_l, 4),
+        "refine_s": round(t_ref, 4), "refine_loop_s": round(t_ref_l, 4),
+        "speedup": round(total_l / total_v, 2)}})
+    return total_v, total_l
+
+
 def run(quick: bool = False):
     rng = np.random.default_rng(0)
     # SpMM engines head-to-head on a real partition shard
@@ -167,6 +273,8 @@ def run(quick: bool = False):
 
     run_fused_kernels(pipeline, comb, feat_out=128, quick=quick)
     run_tile_extraction(quick=quick)
+    run_reorder_sweep(quick=quick)
+    run_partition_build(quick=quick)
 
     # flash attention vs ref
     B, S, H, d = 1, 512, 4, 64

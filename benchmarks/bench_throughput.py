@@ -17,6 +17,10 @@ Three views:
   (c') matmul-ordering sweep (aggregate-first / transform-first / auto) on
       the fused engine, with the analytic per-layer FLOP totals from
       repro.analysis.cost in the derived column.
+  (c'') natural vs rcm node layout under the tile engines on the same
+      partitioning — the reordered tile stream is shorter, so the step is
+      gated to be no slower (interleaved min-of-ratios, <=1.1x), mirroring
+      the PR-4 fused-engine gate.
   (d) SPMD step time vs partitions-per-device (n_local) at fixed P=8 on
       forced host devices — the decoupled partition/device axis; on real
       hardware this is the knob that trades per-device memory for
@@ -119,6 +123,55 @@ def run_engine_comparison(quick: bool = False):
     assert ratio <= 1.1, (
         f"fused engine regressed: {ratio:.2f}x the unfused blocksparse "
         f"step time on CPU-interpret (per-round ratios {ratios})")
+    return out
+
+
+def run_layout_comparison(quick: bool = False):
+    """(c''): natural vs rcm node layout on the SAME partitioning, stepped
+    under the blocksparse and fused engines. The reorder shrinks the tile
+    stream, so even CPU-interpret (which executes every grid step in
+    Python) must get no slower — gated with the interleaved min-of-ratios
+    discipline of the PR-4 engine gate (each round measures natural then
+    rcm so machine drift cancels; rcm <= 1.1x natural)."""
+    name, parts = ("tiny", 4) if quick else ("small", 4)
+    tpl = model_template(name)
+    pipes = {}
+    for layout in ("natural", "rcm"):
+        pipes[layout] = GraphDataPipeline.build(name, parts, kind="sage",
+                                                agg="blocksparse",
+                                                layout=layout)
+    mc0 = ModelConfig(kind="sage",
+                      feat_dim=pipes["natural"].dataset.feat_dim,
+                      hidden=tpl["hidden"], num_layers=tpl["num_layers"],
+                      num_classes=pipes["natural"].dataset.num_classes,
+                      dropout=0.0)
+    iters = 10 if quick else 8
+    out = {}
+    for agg in ("blocksparse", "fused"):
+        mcs = {lay: dataclasses.replace(mc0, agg=agg, layout=lay)
+               for lay in pipes}
+        ratios, best = [], {}
+        for _ in range(3 if quick else 2):
+            t_nat = _measure_step(pipes["natural"], mcs["natural"],
+                                  "pipegcn", iters=iters)
+            t_rcm = _measure_step(pipes["rcm"], mcs["rcm"], "pipegcn",
+                                  iters=iters)
+            best["natural"] = min(best.get("natural", t_nat), t_nat)
+            best["rcm"] = min(best.get("rcm", t_rcm), t_rcm)
+            ratios.append(t_rcm / t_nat)
+        ratio = min(ratios)
+        n_nat = pipes["natural"].topo.tile_rows.shape[-1]
+        n_rcm = pipes["rcm"].topo.tile_rows.shape[-1]
+        emit(f"fig3/layout_step/{name}/p{parts}/{agg}/rcm",
+             best["rcm"] * 1e6,
+             f"natural_us={best['natural'] * 1e6:.0f},"
+             f"rcm_over_natural={ratio:.3f}x,"
+             f"tile_stream={n_nat}->{n_rcm}")
+        out[agg] = ratio
+        assert ratio <= 1.1, (
+            f"rcm layout regressed the {agg} step: {ratio:.2f}x the "
+            f"natural-layout step time on CPU-interpret "
+            f"(per-round ratios {ratios})")
     return out
 
 
@@ -283,6 +336,7 @@ def run(quick: bool = False):
                  f"epochs_per_s={1.0 / t:.2f}")
         out.append((name, parts, m.speedup, wall))
     run_engine_comparison(quick=quick)
+    run_layout_comparison(quick=quick)
     run_order_comparison(quick=quick)
     run_fuse_comparison(quick=quick)
     run_local_sweep(quick=quick)

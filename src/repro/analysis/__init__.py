@@ -1,3 +1,3 @@
-from repro.analysis.cost import analytic_cost
+from repro.analysis.cost import analytic_cost, graph_layout_report
 
-__all__ = ["analytic_cost"]
+__all__ = ["analytic_cost", "graph_layout_report"]

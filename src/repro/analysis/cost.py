@@ -271,22 +271,46 @@ def gcn_layer_order_cost(order: str, fin: int, fout: int, num_rows: int,
     return GcnLayerCost(flops=flops, hbm_bytes=bytes_ * dtype_bytes)
 
 
+def _nnz_per_layer(nnz_eff, num_layers: int) -> list[float]:
+    """Normalize `nnz_eff` to one measured value per layer.
+
+    A scalar is broadcast (the historical uniform-density assumption — the
+    propagation matrix is shared across layers, so this is exact when the
+    caller passes a MEASURED count); a sequence is taken as per-layer
+    measured sparse work and must match the layer count.
+    """
+    if hasattr(nnz_eff, "__len__"):
+        vals = [float(v) for v in nnz_eff]
+        if len(vals) != num_layers:
+            raise ValueError(
+                f"per-layer nnz_eff has {len(vals)} entries for "
+                f"{num_layers} layers")
+        return vals
+    return [float(nnz_eff)] * num_layers
+
+
 def gcn_order_report(layer_dims, num_rows: int, combined: int,
-                     nnz_eff: float, train: bool = True,
+                     nnz_eff, train: bool = True,
                      fused: bool = False, tile: int = _TILE) -> list[dict]:
     """Per-layer cost table: {order: GcnLayerCost} + the argmin choice.
 
     `layer_dims` is ``ModelConfig.layer_dims()`` — [(fin, fout)] per layer.
+    `nnz_eff` is the measured effective sparse multiply-adds per feature
+    column — a scalar (broadcast to every layer) or a per-layer sequence;
+    for the tile engines pass the measured post-layout tile count × T²
+    (PipeGCN.layer_orders does), NOT a uniform-density estimate — a
+    reordered graph has measurably fewer tiles and the argmin can differ.
     The choice minimizes FLOPs; HBM bytes break exact FLOP ties (and are
     reported for the roofline-minded reader either way). Callers with the
-    real kernel tile size in hand (PipeGCN.layer_orders) pass it through —
-    it prices the fused backward's prologue recompute.
+    real kernel tile size in hand pass it through — it prices the fused
+    backward's prologue recompute.
     """
+    per_layer_nnz = _nnz_per_layer(nnz_eff, len(layer_dims))
     out = []
     for ell, (fin, fout) in enumerate(layer_dims):
         costs = {
             order: gcn_layer_order_cost(
-                order, fin, fout, num_rows, combined, nnz_eff,
+                order, fin, fout, num_rows, combined, per_layer_nnz[ell],
                 first_layer=(ell == 0), train=train,
                 fused=(fused and order == "aggregate-first"), tile=tile)
             for order in GCN_ORDERS
@@ -298,12 +322,64 @@ def gcn_order_report(layer_dims, num_rows: int, combined: int,
 
 
 def choose_gcn_orders(layer_dims, num_rows: int, combined: int,
-                      nnz_eff: float, train: bool = True,
+                      nnz_eff, train: bool = True,
                       fused: bool = False,
                       tile: int = _TILE) -> tuple[str, ...]:
-    """The static per-layer ordering the "auto" matmul_order resolves to."""
+    """The static per-layer ordering the "auto" matmul_order resolves to.
+
+    `nnz_eff` follows `gcn_order_report`: scalar or per-layer measured
+    sparse work (tile count × T² for the tile engines)."""
     return tuple(r["chosen"] for r in gcn_order_report(
         layer_dims, num_rows, combined, nnz_eff, train=train, fused=fused,
         tile=tile))
 
 
+# ----------------------------------------------------------------------
+# Graph-layout report: how well a PartitionedGraph's intra-partition node
+# order packs the tile frontier the block-sparse engines pay for. Consumed
+# by the trainer log line, benchmarks/bench_kernels.run_reorder_sweep (the
+# BENCH_*.json natural-vs-rcm record + gate), and tests/test_reorder.py.
+# ----------------------------------------------------------------------
+
+def graph_layout_report(pg, tile: int = _TILE) -> dict:
+    """Layout-quality metrics of the padded partition shards.
+
+    Per partition (and aggregated):
+      tiles       nonempty tile×tile blocks of the local [P_in | P_bd]
+                  shard (TRUE count over real edges — no padding, no
+                  zero fillers; the quantity the reorder shrinks)
+      bandwidth   max |row − col| over intra-partition edges (the RCM
+                  objective); `mean_bandwidth` alongside
+      halo_rows   rows with at least one halo-column edge
+      halo_runs   maximal contiguous runs of those rows — 1 means the halo
+                  frontier is perfectly clustered
+    """
+    import numpy as np
+    combined = pg.max_inner + pg.num_parts * pg.slot
+    ncb = -(-combined // tile)
+    per = []
+    for i in range(pg.num_parts):
+        keep = pg.edge_w[i] != 0
+        row = pg.edge_row[i][keep].astype(np.int64)
+        col = pg.edge_col[i][keep].astype(np.int64)
+        tiles = len(np.unique((row // tile) * ncb + (col // tile)))
+        intra = col < pg.max_inner
+        span = np.abs(row[intra] - col[intra])
+        halo_rows = np.unique(row[~intra])
+        per.append({
+            "tiles": int(tiles),
+            "bandwidth": int(span.max()) if span.size else 0,
+            "mean_bandwidth": float(span.mean()) if span.size else 0.0,
+            "halo_rows": int(len(halo_rows)),
+            "halo_runs": (int(np.sum(np.diff(halo_rows) > 1) + 1)
+                          if len(halo_rows) else 0),
+        })
+    return {
+        "layout": getattr(pg, "layout", "natural"),
+        "tile": tile,
+        "per_partition": per,
+        "tiles": sum(p["tiles"] for p in per),
+        "bandwidth": max(p["bandwidth"] for p in per),
+        "mean_bandwidth": float(np.mean([p["mean_bandwidth"] for p in per])),
+        "halo_runs": sum(p["halo_runs"] for p in per),
+    }

@@ -27,14 +27,30 @@ class ModelConfig:
     #   "auto"             per-layer argmin-FLOPs via the static cost model
     #                      (repro.analysis.cost.choose_gcn_orders)
     matmul_order: str = "aggregate-first"
+    # Intra-partition node layout the graph pipeline builds the shards with
+    # (repro.graph.reorder): "natural" keeps the partitioner's sorted-
+    # global-id order; "rcm" applies RCM bandwidth reduction + halo
+    # clustering (fewer nonempty tiles for the tile engines, numerically
+    # invisible); "auto" — the default — resolves to "rcm" exactly when
+    # `agg` consumes tiles at pipeline build (GraphDataPipeline.build
+    # takes the same knob). This field declares the layout config-side:
+    # train_pipegcn fails fast when an EXPLICIT declaration disagrees
+    # with the layout the pipeline was built with, while "auto" defers to
+    # the pipeline (any built layout is numerically valid under any
+    # engine), so a default-constructed config never trips the check.
+    layout: str = "auto"
 
     ORDERS = ("aggregate-first", "transform-first", "auto")
+    LAYOUTS = ("natural", "rcm", "auto")
 
     def __post_init__(self):
         if self.matmul_order not in self.ORDERS:
             raise ValueError(
                 f"unknown matmul_order {self.matmul_order!r}; "
                 f"have {self.ORDERS}")
+        if self.layout not in self.LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; have {self.LAYOUTS}")
 
     def layer_dims(self) -> list[tuple[int, int]]:
         """[(fan_in_of_aggregated, fan_out)] per layer (pre-concat dims)."""

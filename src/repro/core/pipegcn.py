@@ -497,13 +497,18 @@ class PipeGCN:
             return (mo,) * L
         engine = self.engine
         combined = topo.max_inner + topo.halo_size
-        if engine.name in ("blocksparse", "fused") \
-                and topo.tile_rows is not None:
-            # = tile_density(...)·row_blocks·col_blocks·T² — every stored
-            # tile does a full T×T MXU contraction per feature column
-            nnz_eff = topo.tile_rows.shape[-1] * TILE * TILE
+        from repro.graph.reorder import TILE_ENGINES
+        if engine.name in TILE_ENGINES and topo.tile_rows is not None:
+            # MEASURED tile stream length of this very topology (every
+            # stored tile does a full T×T MXU contraction per feature
+            # column) — with a reordered layout this is the post-reorder
+            # tile count, not a uniform-density estimate, so the argmin
+            # tracks the layout. The propagation shard is shared by every
+            # layer; the per-layer list keeps the cost-model contract
+            # explicit.
+            nnz_eff = [topo.tile_rows.shape[-1] * TILE * TILE] * L
         else:
-            nnz_eff = topo.edge_row.shape[-1]             # padded COO work
+            nnz_eff = [topo.edge_row.shape[-1]] * L       # padded COO work
         from repro.analysis.cost import choose_gcn_orders
         return choose_gcn_orders(self.model.layer_dims(), topo.max_inner,
                                  combined, nnz_eff, train=train,

@@ -72,6 +72,18 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
     # Fail fast (before tracing) if the selected aggregation engine needs
     # Topology fields the pipeline was not built with.
     model._agg_slice(topo)
+    # ... and if the config EXPLICITLY declares a node layout that is not
+    # the one the pipeline was actually built with. The layout lives in
+    # the data, so a drifting ModelConfig.layout must be loud — but
+    # "auto" means "defer to the pipeline" here: any built layout is
+    # numerically valid under any engine (the LAYOUT parity cells prove
+    # coo-on-rcm exact), so auto must not reject a shared pipeline.
+    have = getattr(pipeline, "layout", "natural")
+    if model_cfg.layout != "auto" and model_cfg.layout != have:
+        raise ValueError(
+            f"ModelConfig.layout={model_cfg.layout!r} but the pipeline "
+            f"was built with layout={have!r}; pass the same layout to "
+            "GraphDataPipeline.build (or use layout=\"auto\")")
     if log:
         from repro.core.trace_utils import expected_boundary_collectives
         n_coll = expected_boundary_collectives(model_cfg.num_layers,
@@ -88,6 +100,15 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
         log(f"matmul order ({how}, agg={model_cfg.agg}): "
             + " ".join(f"L{i}:{'PH.W' if o == 'aggregate-first' else 'P.HW'}"
                        for i, o in enumerate(orders)))
+        layout = getattr(pipeline, "layout", "natural")
+        if topo.tile_rows is not None:
+            from repro.analysis.cost import graph_layout_report
+            rep = graph_layout_report(pipeline.pg)
+            log(f"graph layout: {layout} ({rep['tiles']} nonempty tiles, "
+                f"bandwidth {rep['bandwidth']}, "
+                f"{rep['halo_runs']} halo row runs)")
+        else:
+            log(f"graph layout: {layout}")
     params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)

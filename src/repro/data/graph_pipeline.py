@@ -61,18 +61,31 @@ class GraphDataPipeline:
     val_data: ShardedData
     test_data: ShardedData
     agg: str = "coo"
+    layout: str = "natural"        # resolved node layout ("auto" never stored)
 
     @staticmethod
     def build(name_or_ds, num_parts: int, kind: str = "sage",
               seed: int = 0, partition_method: str = "bfs+refine",
-              agg: str = "coo") -> "GraphDataPipeline":
+              agg: str = "coo", layout: str = "auto") -> "GraphDataPipeline":
+        """`layout` picks the intra-partition node order ("natural" | "rcm"
+        | "auto"): "rcm" applies the bandwidth-reducing + halo-clustering
+        permutation of repro.graph.reorder — fewer nonempty tiles for the
+        block-sparse engines, numerically invisible everywhere — and
+        "auto" (the default, matching ModelConfig.layout and the CLI)
+        resolves to "rcm" exactly when the selected aggregation engine
+        consumes tiles. Features/labels/masks are remapped ONCE here
+        (pack_nodes routes through the reordered local_of); results are
+        unpermuted only at the eval/metric boundary (`metric` goes
+        through unpack_nodes)."""
         ds = (make_dataset(name_or_ds) if isinstance(name_or_ds, str)
               else name_or_ds)
+        from repro.graph.reorder import TILE_ENGINES, resolve_layout
+        layout = resolve_layout(layout, agg)
         prop = mean_normalized(ds.graph) if kind == "sage" else sym_normalized(ds.graph)
         part = partition_graph(ds.graph, num_parts, seed=seed,
                                method=partition_method)
-        pg = build_partitioned_graph(prop, part, num_parts)
-        topo = topology_from(pg, with_tiles=(agg in ("blocksparse", "fused")))
+        pg = build_partitioned_graph(prop, part, num_parts, layout=layout)
+        topo = topology_from(pg, with_tiles=(agg in TILE_ENGINES))
         # x/labels/train_mask are split-independent: pack them ONCE and share
         # the arrays across the three views; only eval_mask differs per split.
         base = shard_data(pg, ds.features, ds.labels, ds.train_mask,
@@ -83,7 +96,7 @@ class GraphDataPipeline:
             val_data=base,
             test_data=base._replace(
                 eval_mask=jnp.asarray(pg.pack_nodes(np.asarray(ds.test_mask)))),
-            agg=agg)
+            agg=agg, layout=layout)
 
     def device_layout(self, num_devices: int):
         """Explicit (n_dev, n_local, ...) per-device view of (topo, data)

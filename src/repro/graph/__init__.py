@@ -2,6 +2,7 @@
 from repro.graph.csr import CSRGraph, coo_to_csr, sym_normalized, mean_normalized
 from repro.graph.synthetic import sbm_graph, rmat_graph, make_dataset, DATASETS, GraphDataset
 from repro.graph.partition import partition_graph, edge_cut
+from repro.graph.reorder import LAYOUTS, partition_orders, rcm_order
 from repro.graph.halo import (PartitionedGraph, PartitionTiles,
                               build_partitioned_graph,
                               extract_partition_tiles)
@@ -10,6 +11,7 @@ __all__ = [
     "CSRGraph", "coo_to_csr", "sym_normalized", "mean_normalized",
     "sbm_graph", "rmat_graph", "make_dataset", "DATASETS", "GraphDataset",
     "partition_graph", "edge_cut",
+    "LAYOUTS", "partition_orders", "rcm_order",
     "PartitionedGraph", "PartitionTiles", "build_partitioned_graph",
     "extract_partition_tiles",
 ]

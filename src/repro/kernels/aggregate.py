@@ -23,7 +23,9 @@ in which the intermediate never leaves VMEM. Three implementations:
               (`repro.kernels.gcn_spmm`). Inputs are zero-padded to tile /
               feature-block multiples only when needed (topology-padded
               shapes skip the pad entirely) and the result is sliced back,
-              so callers never see the padded shapes. Compute is f32.
+              so callers never see the padded shapes. Computes in the
+              caller's dtype (f32 in production; f64 under the x64
+              exactness tests).
   fused       blocksparse storage + the fused aggregate+transform kernels:
               forward epilogue matmul (u = z@w + b on the run-flush, with
               optional fused bias+ReLU and z as an optional second output)
@@ -112,55 +114,21 @@ class BlockSparseEngine(AggregationEngine):
     Pads rows to TILE and features to FEAT_BLOCK multiples per call when
     the caller's shapes are not already multiples (the tile grid is fixed
     offline by `build_tile_topology`, so row padding is only about matching
-    the kernel's static output shape), computes in float32, and
-    slices/casts back to the caller's shape and dtype.
+    the kernel's static output shape). Computes in the CALLER'S dtype —
+    f32 in production; f64 under the `jax_enable_x64` exactness tests,
+    where the tile values are upcast and the result stays
+    1e-12-comparable to the COO engine even across node layouts (the
+    cross-layout parity bar of tests/test_reorder.py and the SPMD matrix).
     """
 
     name = "blocksparse"
     fields = ("tile_rows", "tile_cols", "tile_vals",
               "tile_t_out", "tile_t_in", "tile_t_perm")
 
-    def spmm(self, tslice, comb, num_rows: int):
-        tile_rows, tile_cols, tile_vals = tslice[:3]
-        combined, f = comb.shape
-        rpad = _ceil_to(num_rows, TILE)
-        fpad = _ceil_to(f, FEAT_BLOCK)
-        combp = _pad2(comb.astype(jnp.float32),
-                      _ceil_to(combined, TILE), fpad)
-        z = ops.spmm(tile_rows, tile_cols, tile_vals, combp, rpad)
-        assert z.shape == (rpad, fpad), (z.shape, rpad, fpad)
-        return z[:num_rows, :f].astype(comb.dtype)
-
-    def spmm_t(self, tslice, dz, num_cols: int):
-        tile_vals = tslice[2]
-        t_out, t_in, t_perm = tslice[3:]
-        num_rows, f = dz.shape
-        cpad = _ceil_to(num_cols, TILE)
-        fpad = _ceil_to(f, FEAT_BLOCK)
-        dzp = _pad2(dz.astype(jnp.float32),
-                    _ceil_to(num_rows, TILE), fpad)
-        d = ops.spmm_t(t_out, t_in, t_perm, tile_vals, dzp, cpad)
-        assert d.shape == (cpad, fpad), (d.shape, cpad, fpad)
-        return d[:num_cols, :f].astype(dz.dtype)
-
-
-class FusedBlockSparseEngine(BlockSparseEngine):
-    """Blocksparse tiles + fused aggregate⊗transform Pallas kernels.
-
-    Unlike the plain blocksparse engine this one computes in the CALLER'S
-    dtype (tile values are upcast to it), so under `jax_enable_x64` the
-    whole layer runs in f64 interpret mode and stays 1e-12-comparable to
-    the COO engine — the exactness bar the SPMD parity matrix enforces.
-    """
-
-    name = "fused"
-
     def _vals(self, tslice, like):
         tile_vals = tslice[2]
         return tile_vals.astype(like.dtype)
 
-    # The primitive ops (used by the transform-first ordering) also keep
-    # the caller's dtype — override the f32-casting parent versions.
     def spmm(self, tslice, comb, num_rows: int):
         tile_rows, tile_cols = tslice[:2]
         combined, f = comb.shape
@@ -182,6 +150,17 @@ class FusedBlockSparseEngine(BlockSparseEngine):
                        dzp, cpad)
         assert d.shape == (cpad, fpad), (d.shape, cpad, fpad)
         return d[:num_cols, :f]
+
+
+class FusedBlockSparseEngine(BlockSparseEngine):
+    """Blocksparse tiles + fused aggregate⊗transform Pallas kernels.
+
+    The primitive spmm/spmm_t (used by the transform-first ordering) are
+    inherited; the `aggregate_transform*` pair runs the single-pass fused
+    kernels, in the caller's dtype like the parent.
+    """
+
+    name = "fused"
 
     def aggregate_transform(self, tslice, comb, w, b, num_rows: int,
                             relu: bool = False, with_z: bool = True):

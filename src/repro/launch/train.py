@@ -31,7 +31,7 @@ from repro.optim import adamw, linear_warmup_cosine
 def run_gcn(args) -> dict:
     pipeline = GraphDataPipeline.build(args.dataset, args.partitions,
                                        kind=args.gcn_kind, seed=args.seed,
-                                       agg=args.agg)
+                                       agg=args.agg, layout=args.layout)
     mesh = None
     if args.spmd:
         # Partition count is a convergence knob, device count a hardware
@@ -46,7 +46,8 @@ def run_gcn(args) -> dict:
                      num_classes=pipeline.dataset.num_classes,
                      dropout=tpl["dropout"],
                      multilabel=pipeline.dataset.multilabel,
-                     agg=args.agg, matmul_order=args.matmul_order)
+                     agg=args.agg, matmul_order=args.matmul_order,
+                     layout=pipeline.layout)
     import dataclasses
     pc = dataclasses.replace(PipeConfig.named(args.variant, gamma=args.gamma),
                              fuse_exchange=not args.no_fuse_exchange)
@@ -59,6 +60,7 @@ def run_gcn(args) -> dict:
            "parts_per_device": args.parts_per_device,
            "agg": args.agg,
            "matmul_order": args.matmul_order,
+           "layout": pipeline.layout,
            "fuse_exchange": pc.fuse_exchange,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
@@ -135,6 +137,12 @@ def main():
                     help="layer contraction order for P·H·W: (P·H)·W costs "
                          "2·nnz·F_in, P·(H·W) costs 2·nnz·F_out; auto picks "
                          "per layer via the static FLOP model")
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "natural", "rcm"],
+                    help="intra-partition node layout: rcm = bandwidth-"
+                         "reducing reorder + halo clustering (fewer "
+                         "nonempty tiles for the tile engines, numerically "
+                         "invisible); auto = rcm iff --agg uses tiles")
     ap.add_argument("--spmd", action="store_true",
                     help="run the step under shard_map on a device mesh "
                          "instead of the single-device sim backend")

@@ -137,3 +137,68 @@ def test_gcn_order_report_chosen_is_argmin():
     for r in rep:
         best = min(r["costs"].values(), key=lambda c: c.flops)
         assert r["costs"][r["chosen"]].flops == best.flops
+
+
+# ---------------------------------------------------------------------
+# Measured per-layer tile counts (PR-5): the report accepts a per-layer
+# nnz_eff sequence; on a dense-uniform graph (every layer seeing the same
+# measured sparse work) the "auto" decisions must be EXACTLY what the
+# historical scalar form chose — regression guard for the
+# uniform-density-assumption fix.
+# ---------------------------------------------------------------------
+
+def test_per_layer_nnz_uniform_matches_scalar():
+    dims = [(64, 256), (256, 256), (256, 8)]
+    scalar = choose_gcn_orders(dims, 128, 320, 1_000_000)
+    per_layer = choose_gcn_orders(dims, 128, 320, [1_000_000] * 3)
+    assert per_layer == scalar
+    rep_s = gcn_order_report(dims, 128, 320, 1_000_000)
+    rep_l = gcn_order_report(dims, 128, 320, [1_000_000.0] * 3)
+    for a, b in zip(rep_s, rep_l):
+        assert a["chosen"] == b["chosen"]
+        for o in a["costs"]:
+            assert a["costs"][o] == b["costs"][o]
+
+
+def test_per_layer_nnz_can_flip_individual_layers():
+    """Non-uniform measured work flips only the layers it prices: a huge
+    measured tile count on a shrinking layer forces transform-first there
+    while the cheap layers keep aggregate-first."""
+    dims = [(64, 64), (64, 8)]
+    uniform = choose_gcn_orders(dims, 128, 256, 1_000)
+    assert uniform == ("aggregate-first", "aggregate-first")
+    mixed = choose_gcn_orders(dims, 128, 256, [1_000, 5_000_000])
+    assert mixed[0] == "aggregate-first"
+    assert mixed[1] == "transform-first"
+
+
+def test_per_layer_nnz_length_mismatch_rejected():
+    with pytest.raises(ValueError, match="per-layer"):
+        gcn_order_report([(8, 8)] * 3, 16, 32, [10.0, 10.0])
+
+
+def test_graph_layout_report_counts_true_tiles():
+    """The report counts NONEMPTY tiles over real edges only (no padding,
+    no zero fillers) and measures bandwidth on intra-partition edges."""
+    import numpy as np
+    from repro.analysis.cost import graph_layout_report
+    from repro.graph import (build_partitioned_graph, make_dataset,
+                             partition_graph)
+    from repro.graph.csr import sym_normalized
+    ds = make_dataset("tiny")
+    pg = build_partitioned_graph(sym_normalized(ds.graph),
+                                 partition_graph(ds.graph, 2, seed=0), 2)
+    rep = graph_layout_report(pg, tile=128)
+    # oracle: per-partition unique (row//T, col//T) over w != 0
+    want = 0
+    ncb = -(-(pg.max_inner + pg.num_parts * pg.slot) // 128)
+    for i in range(pg.num_parts):
+        keep = pg.edge_w[i] != 0
+        r = pg.edge_row[i][keep].astype(np.int64) // 128
+        c = pg.edge_col[i][keep].astype(np.int64) // 128
+        want += len(np.unique(r * ncb + c))
+    assert rep["tiles"] == want
+    assert rep["layout"] == "natural"
+    assert len(rep["per_partition"]) == pg.num_parts
+    assert all(p["halo_runs"] >= (p["halo_rows"] > 0)
+               for p in rep["per_partition"])

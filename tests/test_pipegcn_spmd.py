@@ -15,15 +15,20 @@ staleness-depth, smoothing}), and the matmul-ordering knob
 Every cell asserts 1e-12 float64 parity vs the sim backend for the loss,
 every weight gradient, and every pipeline buffer, over >=3 steps. The sim
 reference ALWAYS runs the blocking per-layer schedule (fuse_exchange=False)
-and, for `agg="fused"` cells, the COO engine — the fused engine computes in
+and, for `agg="fused"` cells, the COO engine — the tile engines compute in
 the caller's dtype (f64 here), so those cells are simultaneously a
 cross-backend, a cross-schedule, AND a cross-ENGINE 1e-12 exactness check
-of the fused Pallas kernels against segment_sum. (Plain blocksparse casts
-to f32 internally, so its cells compare same-engine only.) The whole
+of the fused Pallas kernels against segment_sum. The whole
 matrix runs in ONE subprocess so it alone sees 8 forced host devices; the
 rest of the suite keeps the single real device. One dataset/partitioning is
 built per process and the Topology carries tile streams alongside the COO
 shards, so every engine (and every n_local) runs on identical inputs.
+
+The LAYOUT matrix additionally runs the SPMD model on the rcm-reordered
+shards against the natural-layout sim reference (all variants × engines ×
+n_local): node reordering must be numerically invisible, so loss / weight
+grads / UNPACKED logits stay 1e-12 while the pipeline buffers (which live
+in permuted coordinates and are intentionally not compared) differ.
 """
 import os
 import subprocess
@@ -83,6 +88,18 @@ EXTRA = [
     ("vanilla", "fused", 2, {"matmul_order": "auto"}, "1d"),
     ("pipegcn", "fused", 2, {}, "2d"),
 ]
+# Cross-layout cells: rcm-reordered SPMD model vs natural-layout sim
+# reference — the full variants × engines × n_local product, so node
+# reordering is proven numerically invisible on every code path.
+LAYOUT = [(v, a, nl, {"layout": "rcm"}, "1d")
+          for v in ("vanilla", "pipegcn", "pipegcn-gf")
+          for a in ("coo", "blocksparse", "fused")
+          for nl in (1, 2, 4)] + [
+    # reordering must also commute with the wire/schedule knobs
+    ("pipegcn", "coo", 2, {"layout": "rcm", "compress_boundary": True}, "1d"),
+    ("pipegcn", "fused", 2, {"layout": "rcm", "staleness_steps": 2}, "1d"),
+    ("pipegcn", "blocksparse", 2, {"layout": "rcm"}, "2d"),
+]
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -100,37 +117,46 @@ SCRIPT = textwrap.dedent("""
     P = 8
     ds = make_dataset("tiny")
     prop = mean_normalized(ds.graph)
-    pg = build_partitioned_graph(prop, partition_graph(ds.graph, P, seed=0), P)
-    # One topology for every cell: COO shards in f64 for exact parity, tile
-    # streams staying f32 (the blocksparse engine computes in f32 either
-    # way — parity vs sim is still exact because both backends run the
-    # identical kernels on identical values).
-    topo = topology_from(pg, with_tiles=True)
-    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
-    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
-                      ds.train_mask, ds.val_mask)
-    data = data._replace(x=data.x.astype(jnp.float64))
+    part = partition_graph(ds.graph, P, seed=0)
+
+    def build(layout):
+        pg = build_partitioned_graph(prop, part, P, layout=layout)
+        topo = topology_from(pg, with_tiles=True)
+        topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+        data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                          ds.train_mask, ds.val_mask)
+        return pg, topo, data._replace(x=data.x.astype(jnp.float64))
+
+    # One topology per layout for every cell: COO shards in f64 for exact
+    # parity; the tile engines compute in the caller's dtype, so their
+    # cells are exact too.
+    pg, topo, data = build("natural")
+    pg_rcm, topo_rcm, data_rcm = build("rcm")
 
     def run(variant, agg, n_local, pipe_kw, axis_spec, steps=3):
         pipe_kw = dict(pipe_kw)
         mo = pipe_kw.pop("matmul_order", "aggregate-first")
+        layout = pipe_kw.pop("layout", "natural")
         mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
                          num_layers=3, num_classes=ds.num_classes,
                          dropout=0.0, agg=agg, matmul_order=mo)
         pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.9),
                                  **pipe_kw)
-        # The sim reference always runs the blocking per-layer schedule;
-        # the SPMD model runs the cell's (fused by default). The schedules
-        # are bit-identical by construction, so parity must stay 1e-12.
-        # For the fused engine the reference additionally switches to the
-        # COO engine: both run in f64 here, so the cell doubles as a
-        # cross-engine exactness check of the fused Pallas kernels.
+        # The sim reference always runs the blocking per-layer schedule on
+        # the NATURAL layout; the SPMD model runs the cell's schedule on
+        # the cell's layout. Schedules are bit-identical by construction
+        # and reordering is permutation-equivariant, so parity must stay
+        # 1e-12. For the fused engine the reference additionally switches
+        # to the COO engine: both run in f64 here, so the cell doubles as
+        # a cross-engine exactness check of the fused Pallas kernels.
         ref_mc = dataclasses.replace(mc, agg="coo") if agg == "fused" else mc
         ref = PipeGCN(ref_mc, dataclasses.replace(pc, fuse_exchange=False))
         model = PipeGCN(mc, pc)
+        topo_m, data_m = (topo_rcm, data_rcm) if layout == "rcm" \
+            else (topo, data)
         params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
         b_sim = model.init_buffers(topo, dtype=jnp.float64)
-        b_spmd = model.init_buffers(topo, dtype=jnp.float64)
+        b_spmd = model.init_buffers(topo_m, dtype=jnp.float64)
         n_dev = P // n_local
         if axis_spec == "2d":
             mesh = make_mesh((2, n_dev // 2), ("a", "b"),
@@ -139,21 +165,30 @@ SCRIPT = textwrap.dedent("""
         else:
             mesh = make_partition_mesh(P, parts_per_device=n_local)
             axis = "parts"
-        step = model.make_spmd_step(mesh, topo, axis)
-        cell = (variant, agg, f"nl{n_local}", axis_spec, pipe_kw)
+        step = model.make_spmd_step(mesh, topo_m, axis)
+        cell = (variant, agg, f"nl{n_local}", axis_spec, layout, pipe_kw)
         for t in range(steps):
             key = jax.random.PRNGKey(t)
-            l1, g1, b_sim, _ = ref.train_step(topo, params, b_sim, data, key)
-            l2, _, g2, b_spmd = step(topo, params, b_spmd, data, key)
+            l1, g1, b_sim, lg1 = ref.train_step(topo, params, b_sim, data,
+                                                key)
+            l2, lg2, g2, b_spmd = step(topo_m, params, b_spmd, data_m, key)
             assert abs(float(l1) - float(l2)) < 1e-12, ("loss", cell, t)
             for k in g1:
                 d = float(jnp.abs(g1[k] - jnp.asarray(g2[k])).max())
                 assert d < 1e-12, ("grad", cell, t, k, d)
-            for a, b in zip(jax.tree.leaves(b_sim), jax.tree.leaves(b_spmd)):
-                d = float(jnp.abs(a - jnp.asarray(b)).max())
-                assert d < 1e-12, ("buffers", cell, t, d)
-        print(f"OK {variant}/{agg}/{mo}/nl{n_local}/{axis_spec}/{pipe_kw}",
-              flush=True)
+            if layout == "natural":
+                for a, b in zip(jax.tree.leaves(b_sim),
+                                jax.tree.leaves(b_spmd)):
+                    d = float(jnp.abs(a - jnp.asarray(b)).max())
+                    assert d < 1e-12, ("buffers", cell, t, d)
+            else:
+                # buffers live in permuted coordinates; compare the
+                # UNPACKED logits instead (the eval/metric contract)
+                d = np.abs(pg.unpack_nodes(np.asarray(lg1))
+                           - pg_rcm.unpack_nodes(np.asarray(lg2))).max()
+                assert float(d) < 1e-12, ("logits", cell, t, d)
+        print(f"OK {variant}/{agg}/{mo}/{layout}/nl{n_local}/{axis_spec}/"
+              f"{pipe_kw}", flush=True)
 
     import json, sys
     cells = json.loads(sys.argv[1])
@@ -167,7 +202,7 @@ SCRIPT = textwrap.dedent("""
 @pytest.mark.slow
 def test_spmd_matrix_equals_sim_subprocess():
     import json
-    cells = MATRIX + EXTRA
+    cells = MATRIX + EXTRA + LAYOUT
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)
