@@ -126,19 +126,28 @@ def run_reorder_sweep(quick: bool):
     the nonempty-tile frontier the block-sparse engines pay for, plus
     bandwidth / halo-run-count from `analysis.cost.graph_layout_report`.
 
-    GATED twice: rcm must NEVER store more nonempty tiles than natural
-    (any partition count), and on the designated power-law graph
-    (reddit-sim, >=4 partitions — heavy-tailed R-MAT overlay) the
-    reduction must hold >=15% (the PR-5 acceptance bar; measured 16-22%
-    at p4-p8). The record lands in BENCH_*.json via emit + emit_meta."""
+    GATED three ways: on power-law graphs rcm must NEVER store more
+    nonempty tiles than natural (any partition count), and on the
+    designated power-law graph (reddit-sim, >=4 partitions — heavy-tailed
+    R-MAT overlay) the reduction must hold >=15% (the PR-5 acceptance
+    bar; measured 16-22% at p4-p8). On the lattice (grid-sim — natural
+    row-major order is already banded) rcm instead pays a capped tile
+    increase (<=1.25x) to cluster the halo into a split-feasible tail,
+    gated on bnd_tile_share < 0.6 — the overlappable-work record the
+    split-phase schedule consumes. Lands in BENCH_*.json via
+    emit + emit_meta."""
     from repro.analysis.cost import graph_layout_report
     from repro.graph import make_dataset, partition_graph
     from repro.graph.csr import mean_normalized
     from repro.graph.halo import build_partitioned_graph
 
-    cases = [("reddit-sim", 4)] if quick else [("reddit-sim", 4),
-                                               ("reddit-sim", 8),
-                                               ("products-sim", 8)]
+    # grid-sim rides along in both modes: the planar lattice is the only
+    # case where rcm leaves a split-feasible boundary tail, so its row
+    # shows how much of the tile stream the split-phase overlap can hide
+    # (bnd_tile_share << 1; the power-law sims are ~all-boundary -> 1.0).
+    cases = ([("reddit-sim", 4), ("grid-sim", 4)] if quick else
+             [("reddit-sim", 4), ("reddit-sim", 8), ("products-sim", 8),
+              ("grid-sim", 4)])
     import time
     out = {}
     for name, parts in cases:
@@ -155,7 +164,8 @@ def run_reorder_sweep(quick: bool):
             emit(f"kernels/reorder/{name}/p{parts}/{layout}", dt * 1e6,
                  f"tiles={rep['tiles']},bandwidth={rep['bandwidth']},"
                  f"halo_runs={rep['halo_runs']},"
-                 f"mean_bandwidth={rep['mean_bandwidth']:.1f}")
+                 f"mean_bandwidth={rep['mean_bandwidth']:.1f},"
+                 f"bnd_tile_share={rep['bnd_tile_share']:.2f}")
         tn, tr = reports["natural"]["tiles"], reports["rcm"]["tiles"]
         reduction = (tn - tr) / tn
         emit(f"kernels/reorder/{name}/p{parts}/reduction", reduction * 100,
@@ -165,14 +175,35 @@ def run_reorder_sweep(quick: bool):
             "bandwidth_natural": reports["natural"]["bandwidth"],
             "bandwidth_rcm": reports["rcm"]["bandwidth"],
             "halo_runs_natural": reports["natural"]["halo_runs"],
-            "halo_runs_rcm": reports["rcm"]["halo_runs"]}})
-        assert tr <= tn, (
-            f"rcm layout stores MORE tiles than natural on {name}/p{parts}: "
-            f"{tr} vs {tn}")
+            "halo_runs_rcm": reports["rcm"]["halo_runs"],
+            "split_feasible_rcm": reports["rcm"]["split_feasible"],
+            "bnd_tiles_rcm": reports["rcm"]["bnd_tiles"]}})
+        if name.startswith("grid"):
+            # A row-major lattice is ALREADY banded, so rcm can't shrink
+            # the stream — its halo clustering trades a bounded tile
+            # increase (the serpentine band breaks at the moved boundary
+            # rows) for the split-feasible tail gated below. Cap the
+            # price instead of requiring a reduction.
+            assert tr <= tn * 1.25, (
+                f"rcm halo clustering on {name}/p{parts} costs too many "
+                f"tiles: {tn} -> {tr} (> 1.25x)")
+        else:
+            assert tr <= tn, (
+                f"rcm layout stores MORE tiles than natural on "
+                f"{name}/p{parts}: {tr} vs {tn}")
         if name == "reddit-sim":
             assert reduction >= 0.15, (
                 f"rcm tile reduction regressed below the 15% acceptance "
                 f"bar on {name}/p{parts}: {reduction:.1%} ({tn} -> {tr})")
+        if name.startswith("grid"):
+            # the lattice under rcm must stay split-feasible with a
+            # minority boundary tail — this is the overlappable work the
+            # split-phase schedule hides the exchange behind
+            rep = reports["rcm"]
+            assert rep["split_feasible"] and rep["bnd_tile_share"] < 0.6, (
+                f"{name}/p{parts} rcm lost its interior phase: "
+                f"feasible={rep['split_feasible']}, "
+                f"bnd_tile_share={rep['bnd_tile_share']:.2f}")
         out[(name, parts)] = reduction
     return out
 

@@ -12,6 +12,67 @@ import time
 import traceback
 
 
+def _structural_leaves(node, prefix=""):
+    """Flatten META to (path, value) pairs, keeping only machine-independent
+    leaves (ints / bools / strings — tile counts, collective counts,
+    schedule facts). Floats are timings or derived ratios and are skipped:
+    the baseline is recorded on different hardware than CI replays it on."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _structural_leaves(v, f"{prefix}{k}/")
+    elif isinstance(node, bool) or isinstance(node, int) or \
+            isinstance(node, str):
+        yield prefix.rstrip("/"), node
+
+
+def diff_baseline(path: str, records: list[dict], meta: dict) -> int:
+    """Regression gate against a checked-in BENCH_*.json baseline.
+
+    Hard-fails on (a) record names present in the baseline but missing from
+    this run — benchmark coverage silently shrank — and (b) structural META
+    mismatches (per-step collective counts, tile counts, overlap phase
+    sizes: deterministic facts that must reproduce exactly on any machine).
+    Timing drift is reported but NOT gated here; the per-bench interleaved
+    ratio gates (fused/layout/overlap) own wall-clock regressions because
+    they self-normalize on the running machine. Run with the same --only
+    set the baseline was recorded with."""
+    import json
+    with open(path) as f:
+        base = json.load(f)
+    failures = 0
+    cur_by_name = {r["name"]: r for r in records}
+    missing = [n for n in (r["name"] for r in base["records"])
+               if n not in cur_by_name]
+    if missing:
+        failures += 1
+        print(f"# baseline DIFF: {len(missing)} record(s) in {path} "
+              f"missing from this run: {missing[:8]}", flush=True)
+    base_leaves = dict(_structural_leaves(base.get("meta", {})))
+    cur_leaves = dict(_structural_leaves(meta))
+    for key, bval in base_leaves.items():
+        if key not in cur_leaves:
+            failures += 1
+            print(f"# baseline DIFF: meta {key} missing "
+                  f"(baseline {bval!r})", flush=True)
+        elif cur_leaves[key] != bval:
+            failures += 1
+            print(f"# baseline DIFF: meta {key} = {cur_leaves[key]!r}, "
+                  f"baseline {bval!r}", flush=True)
+    # informational timing drift (worst 5 by ratio)
+    drifts = []
+    for r in base["records"]:
+        cur = cur_by_name.get(r["name"])
+        if cur and r["us_per_call"] > 0 and cur["us_per_call"] > 0:
+            drifts.append((cur["us_per_call"] / r["us_per_call"], r["name"]))
+    for ratio, name in sorted(drifts, reverse=True)[:5]:
+        print(f"# baseline drift: {name} {ratio:.2f}x", flush=True)
+    if not failures:
+        print(f"# baseline OK: {len(base['records'])} records matched "
+              f"against {path}, {len(base_leaves)} structural leaves equal",
+              flush=True)
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -22,6 +83,12 @@ def main() -> None:
                     help="write the emitted rows + structured metadata "
                          "(per-step collective counts) as a JSON artifact "
                          "(the CI perf trajectory, BENCH_*.json)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="checked-in BENCH_*.json to diff against "
+                         "(benchmarks/baselines/): fail on shrunk record "
+                         "coverage or changed structural metadata; timing "
+                         "drift is reported, the interleaved ratio gates "
+                         "own wall-clock regressions")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -65,6 +132,8 @@ def main() -> None:
             failures += 1
             print(f"# bench {name}: FAILED", flush=True)
             traceback.print_exc()
+    if args.baseline:
+        failures += diff_baseline(args.baseline, common.RECORDS, common.META)
     if args.json:
         import json
         payload = {"quick": quick, "benches": sorted(only),

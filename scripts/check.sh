@@ -17,4 +17,8 @@ if ! python -c "import jax" 2>/tmp/jax_import_err.$$; then
 fi
 rm -f /tmp/jax_import_err.$$
 
+# Preflight: trace-level proof that the split-phase overlap schedule issues
+# every boundary collective between the phase kernels, on both backends.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.check_schedule
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"

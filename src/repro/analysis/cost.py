@@ -353,8 +353,21 @@ def graph_layout_report(pg, tile: int = _TILE) -> dict:
       halo_rows   rows with at least one halo-column edge
       halo_runs   maximal contiguous runs of those rows — 1 means the halo
                   frontier is perfectly clustered
+      bnd_tiles   nonempty tiles whose output rows land in the boundary
+                  tail (row block >= the split-phase cut b0) — the
+                  critical-path prefix the split schedule must run BEFORE
+                  issuing the exchange; when the split is infeasible the
+                  whole stream is the prefix (bnd_tiles == tiles)
+    Aggregated: `bnd_tile_share` = Σbnd_tiles / Σtiles (the fraction of
+    sparse work that is NOT overlappable — 1.0 when infeasible), so the
+    reorder sweep shows how much of the tile stream each layout exposes
+    to the split-phase overlap.
     """
     import numpy as np
+
+    from repro.graph.halo import boundary_row_split
+    split = boundary_row_split(pg, tile)
+    b0 = split["b0"] if split["feasible"] else 0
     combined = pg.max_inner + pg.num_parts * pg.slot
     ncb = -(-combined // tile)
     per = []
@@ -362,24 +375,70 @@ def graph_layout_report(pg, tile: int = _TILE) -> dict:
         keep = pg.edge_w[i] != 0
         row = pg.edge_row[i][keep].astype(np.int64)
         col = pg.edge_col[i][keep].astype(np.int64)
-        tiles = len(np.unique((row // tile) * ncb + (col // tile)))
+        tile_ids = np.unique((row // tile) * ncb + (col // tile))
+        tiles = len(tile_ids)
         intra = col < pg.max_inner
         span = np.abs(row[intra] - col[intra])
         halo_rows = np.unique(row[~intra])
         per.append({
             "tiles": int(tiles),
+            "bnd_tiles": int(np.sum(tile_ids // ncb >= b0)
+                             if split["feasible"] else tiles),
             "bandwidth": int(span.max()) if span.size else 0,
             "mean_bandwidth": float(span.mean()) if span.size else 0.0,
             "halo_rows": int(len(halo_rows)),
             "halo_runs": (int(np.sum(np.diff(halo_rows) > 1) + 1)
                           if len(halo_rows) else 0),
         })
+    tiles_total = sum(p["tiles"] for p in per)
+    bnd_total = sum(p["bnd_tiles"] for p in per)
     return {
         "layout": getattr(pg, "layout", "natural"),
         "tile": tile,
         "per_partition": per,
-        "tiles": sum(p["tiles"] for p in per),
+        "tiles": tiles_total,
         "bandwidth": max(p["bandwidth"] for p in per),
         "mean_bandwidth": float(np.mean([p["mean_bandwidth"] for p in per])),
         "halo_runs": sum(p["halo_runs"] for p in per),
+        "split_feasible": bool(split["feasible"]),
+        "bnd_tiles": bnd_total,
+        "bnd_tile_share": float(bnd_total / max(tiles_total, 1)),
     }
+
+
+def split_overlap_report(pg, layer_dims, tile: int = _TILE,
+                         dtype_bytes: int = 4) -> list[dict]:
+    """Static per-layer price of the split-phase schedule.
+
+    For each layer: the MXU FLOPs of the boundary phase (the critical-path
+    prefix that must finish before the exchange can be issued), the
+    interior-phase FLOPs available to hide the collective behind, and the
+    per-partition bytes each direction puts on the wire (forward feature
+    send of width fin; the backward gradient send has the same width —
+    layer 0 sends no gradient). `overlappable` is the interior share of
+    the padded tile stream — what fraction of the layer's sparse work the
+    schedule moves behind the in-flight collective. Tile counts are the
+    PADDED per-partition stream (every partition executes the same grid),
+    from the same memoized extraction the Topology uses; returns [] when
+    the split is infeasible for this graph."""
+    from repro.graph.halo import extract_partition_tiles
+    pt = extract_partition_tiles(pg, tile)
+    if pt.fwd_bnd is None:
+        return []
+    n_tiles = pt.rows.shape[-1]
+    wire_rows = pg.num_parts * pg.slot
+    out = []
+    for ell, (fin, fout) in enumerate(layer_dims):
+        mxu = 2.0 * tile * tile          # multiply-adds per tile per column
+        out.append({
+            "layer": ell,
+            "bnd_flops": pt.fwd_bnd * mxu * fin,
+            "int_flops": (n_tiles - pt.fwd_bnd) * mxu * fin,
+            "t_bnd_flops": pt.t_bnd * mxu * fin,
+            "t_int_flops": (n_tiles - pt.t_bnd) * mxu * fin,
+            "wire_bytes": wire_rows * fin * dtype_bytes,
+            "grad_wire_bytes": (wire_rows * fin * dtype_bytes
+                                if ell > 0 else 0),
+            "overlappable": float((n_tiles - pt.fwd_bnd) / n_tiles),
+        })
+    return out

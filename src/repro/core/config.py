@@ -88,6 +88,26 @@ class PipeConfig:
     # to the per-layer schedule; no effect when stale=False (vanilla mode
     # needs fresh per-layer exchanges on the critical path).
     fuse_exchange: bool = True
+    # Split-phase overlap (ISSUE 6): compute the boundary-phase SpMM (the
+    # halo-clustered tail runs of the rcm tile stream) first, issue the
+    # exchange for the NEXT consumer immediately, and run the interior
+    # phase — the bulk of the aggregation — while the collective is in
+    # flight. "none" keeps the unsplit schedule; "split-phase" forces the
+    # split (requires a PipeGCN built with a SplitSpec — see
+    # core.pipegcn.split_spec_from); "auto" (default) enables it exactly
+    # when a split spec is available AND the aggregation engine consumes
+    # tiles (the engines whose streams the phase split actually
+    # reorders). Numerically the split is bit-identical to the unsplit
+    # schedule; it only repositions each collective between the two
+    # phases (collective COUNTS are unchanged in every mode).
+    overlap: str = "auto"
+
+    OVERLAPS = ("auto", "none", "split-phase")
+
+    def __post_init__(self):
+        if self.overlap not in self.OVERLAPS:
+            raise ValueError(
+                f"unknown overlap {self.overlap!r}; have {self.OVERLAPS}")
 
     @property
     def fused(self) -> bool:

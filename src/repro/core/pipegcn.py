@@ -69,7 +69,7 @@ import numpy as np
 from repro.core.config import ModelConfig, PipeConfig
 from repro.graph.halo import PartitionedGraph, extract_partition_tiles
 from repro.kernels.aggregate import get_engine
-from repro.kernels.gcn_spmm import TILE
+from repro.kernels.gcn_spmm import TILE, SplitSpec
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -171,6 +171,34 @@ def _gather_send(h, send_idx, send_mask):
     p, slot = send_idx.shape
     out = h[send_idx.reshape(-1)].reshape(p, slot, -1)
     return jnp.where(send_mask[..., None], out, 0.0)
+
+
+def _gather_send_tail(h_tail, send_idx, send_mask, row_tail):
+    """`_gather_send` reading from a boundary-phase tail slice.
+
+    `h_tail` holds only rows [row_tail, max_inner) of the layer output —
+    exactly the rows the boundary phase produced. Every REAL send index is
+    >= row_tail by construction of the split (`boundary_row_split`); padded
+    (masked-out) slots carry index 0, which is clamped onto the first tail
+    row and then zeroed by the mask, exactly like `_gather_send` does."""
+    p, slot = send_idx.shape
+    idx = jnp.maximum(send_idx.reshape(-1) - row_tail, 0)
+    out = h_tail[idx].reshape(p, slot, -1)
+    return jnp.where(send_mask[..., None], out, 0.0)
+
+
+def split_spec_from(pg: PartitionedGraph, tile: int = TILE) -> SplitSpec | None:
+    """The split-phase schedule spec of a partitioned graph, or None when
+    the split is infeasible (P=1 / no sends / boundary rows not clustered
+    into a proper tail — see `repro.graph.halo.boundary_row_split`). The
+    tile-group sizes come from the same memoized `extract_partition_tiles`
+    call that `topology_from(pg, with_tiles=True)` uses, so the phase cut
+    and the padded tile streams are consistent by construction."""
+    pt = extract_partition_tiles(pg, tile)
+    if pt.fwd_bnd is None:
+        return None
+    return SplitSpec(row_tail=pt.b0 * tile, col_tail=pt.hb0 * tile,
+                     fwd_bnd_tiles=pt.fwd_bnd, t_bnd_tiles=pt.t_bnd)
 
 
 def _scatter_recv(contrib, send_idx, send_mask, max_inner):
@@ -417,6 +445,11 @@ class PipeGCN:
 
     model: ModelConfig
     pipe: PipeConfig
+    # Split-phase overlap spec (ISSUE 6) — static trace-time constants from
+    # `split_spec_from(pg)`; None disables the split regardless of
+    # `pipe.overlap` (the schedule falls back to the unsplit `_step_impl`
+    # body, e.g. for P=1 or layouts without a clustered boundary tail).
+    split: SplitSpec | None = None
 
     # ---------------- parameters & state ----------------
 
@@ -481,7 +514,25 @@ class PipeGCN:
                 f"GraphDataPipeline.build(..., agg={engine.name!r})")
         return tslice
 
-    def layer_orders(self, topo: Topology, train: bool = True) -> tuple[str, ...]:
+    def _split_active(self) -> SplitSpec | None:
+        """The SplitSpec the step should run with, or None for unsplit.
+
+        "none" and a missing spec always mean unsplit; "split-phase" uses
+        the spec whenever one exists (degenerate graphs still fall back —
+        there is no boundary tail to phase); "auto" additionally requires
+        an engine that consumes tile streams (the split only repositions
+        collectives around the tile phases; for COO it is a pure masking
+        overhead, kept reachable via the explicit "split-phase" for the
+        cross-engine parity tests)."""
+        if self.pipe.overlap == "none" or self.split is None:
+            return None
+        if self.pipe.overlap == "split-phase":
+            return self.split
+        from repro.graph.reorder import TILE_ENGINES
+        return self.split if self.engine.name in TILE_ENGINES else None
+
+    def layer_orders(self, topo: Topology, train: bool = True,
+                     fused: bool | None = None) -> tuple[str, ...]:
         """Per-layer matmul ordering, resolved statically (trace-time).
 
         "auto" feeds the static FLOP model (`repro.analysis.cost`) the
@@ -490,6 +541,11 @@ class PipeGCN:
         padded COO length otherwise. Everything here is a Python int from
         array *shapes*, so the choice is identical on every backend and
         every partition and never enters the traced program.
+
+        `fused` overrides the cost model's fused-epilogue assumption: the
+        split-phase schedule runs the fused engine through the composed
+        phased path (the in-kernel epilogue would write garbage through
+        the dense weight for out-of-phase rows), so it prices fused=False.
         """
         mo = self.model.matmul_order
         L = self.model.num_layers
@@ -510,9 +566,11 @@ class PipeGCN:
         else:
             nnz_eff = [topo.edge_row.shape[-1]] * L       # padded COO work
         from repro.analysis.cost import choose_gcn_orders
+        if fused is None:
+            fused = engine.name == "fused"
         return choose_gcn_orders(self.model.layer_dims(), topo.max_inner,
                                  combined, nnz_eff, train=train,
-                                 fused=engine.name == "fused", tile=TILE)
+                                 fused=fused, tile=TILE)
 
     def _layer_forward(self, tslice, w, b, h_prev, halo, drop_mask,
                        order: str = "aggregate-first",
@@ -594,6 +652,10 @@ class PipeGCN:
         """Runs per-partition under `backend`. In sim the arrays keep their
         leading partition axis and per-partition ops are vmapped; in spmd this
         body executes inside shard_map with squeezed arrays."""
+        sp = self._split_active()
+        if sp is not None:
+            return self._step_impl_split(backend, topo, params, buffers,
+                                         data, key, train, sp)
         L = self.model.num_layers
         dims = self.model.layer_dims()
         pipe = self.pipe
@@ -773,6 +835,310 @@ class PipeGCN:
                 fresh_contrib = scatter(db_recv, send_idx, send_mask)
                 new_grad[ell] = self._update_buffer(
                     buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+
+        new_buffers = {"feat": tuple(new_feat), "grad": tuple(new_grad)}
+        return loss, logits, grads, new_buffers
+
+    # ---------------- split-phase step (ISSUE 6) ----------------
+
+    def _step_impl_split(self, backend, topo: Topology, params, buffers,
+                         data, key, train: bool, sp: SplitSpec):
+        """`_step_impl` under the split-phase overlap schedule.
+
+        Each layer's aggregation is cut into a *boundary* phase (the tile
+        groups whose output rows feed the send gather: rows >= sp.row_tail
+        forward, comb rows >= sp.col_tail transposed) and an *interior*
+        phase. Per layer the boundary phase runs FIRST, the rows the next
+        exchange needs are gathered from its tail, the collective is issued
+        (or, in fused mode, the single packed collective once the last
+        payload is ready), and only then does the interior phase — the bulk
+        of the SpMM — execute: the collective is in flight behind it. The
+        received halo is consumed strictly later (the next layer in vanilla
+        mode; step t+1 in stale mode), so nothing waits on the wire.
+
+        Numerics: each phase is bit-identical to the unsplit kernel on its
+        own rows and the dense transform/activation/gather/scatter algebra
+        is row-local, so reassembling [interior; boundary] reproduces the
+        unsplit step exactly — the split only REPOSITIONS each collective
+        between the two phase kernels (counts are unchanged; see
+        trace_utils.expected_split_events). The fused engine runs through
+        the composed phased path (its in-kernel epilogue would push
+        unspecified out-of-phase rows through the dense weight), hence
+        `layer_orders(..., fused=False)`.
+        """
+        L = self.model.num_layers
+        dims = self.model.layer_dims()
+        pipe = self.pipe
+        P = topo.num_parts
+        max_inner = topo.max_inner
+        combined = max_inner + P * topo.slot
+        rt, ct = sp.row_tail, sp.col_tail
+        sage = self.model.kind == "sage"
+        engine = self.engine
+
+        tslice = self._agg_slice(topo)
+        send_idx, send_mask = topo.send_idx, topo.send_mask
+        lead = backend.lead_axis
+        if lead:
+            gather = jax.vmap(_gather_send)
+            gather_tail = jax.vmap(partial(_gather_send_tail, row_tail=rt))
+            scatter = jax.vmap(partial(_scatter_recv, max_inner=max_inner))
+        else:
+            gather = _gather_send
+            gather_tail = partial(_gather_send_tail, row_tail=rt)
+            scatter = partial(_scatter_recv, max_inner=max_inner)
+
+        def spmm_phase(src, phase):
+            if lead:
+                return jax.vmap(lambda ts, s, p_=phase: engine.spmm_phased(
+                    ts, s, max_inner, sp, p_))(tslice, src)
+            return engine.spmm_phased(tslice, src, max_inner, sp, phase)
+
+        def spmm_t_phase(src, phase):
+            if lead:
+                return jax.vmap(lambda ts, s, p_=phase: engine.spmm_t_phased(
+                    ts, s, combined, sp, p_))(tslice, src)
+            return engine.spmm_t_phased(tslice, src, combined, sp, phase)
+
+        fuse = pipe.fused
+        # fused=False: the split runs the composed (non-epilogue) path.
+        orders = self.layer_orders(topo, train=train, fused=False)
+        residuals = []
+        new_feat = [None] * L
+        pending_feat = []
+        feat_dtypes = []
+        dropout_rate = self.model.dropout if train else 0.0
+
+        # -- boundary feature communication helpers ------------------------
+        # land_feat: per-layer schedule — exchange now, land into halo/buffer.
+        # defer_feat: fused schedule — queue the payload, read stale state.
+        # flush_feat: the ONE packed collective, payload order [0..L-1]
+        # (identical to the unsplit fused pack, hence bit-identical).
+        def land_feat(ell, send, send_dtype):
+            fresh = backend.exchange(send)
+            if pipe.compress_boundary:
+                fresh = fresh.astype(send_dtype)
+            fresh = fresh.reshape(
+                fresh.shape[:-3] + (P * topo.slot, dims[ell][0]))
+            if pipe.stale:
+                halo = self._consume_buffer(buffers["feat"][ell])
+                new_feat[ell] = self._update_buffer(
+                    buffers["feat"][ell], fresh, pipe.smooth_feat)
+            else:
+                halo = fresh
+                new_feat[ell] = buffers["feat"][ell]
+            return halo
+
+        def defer_feat(ell, send, send_dtype):
+            pending_feat.append(send)
+            feat_dtypes.append(send_dtype)
+            return self._consume_buffer(buffers["feat"][ell])
+
+        def flush_feat():
+            for ell, fresh in enumerate(backend.fused_exchange(pending_feat)):
+                fresh = fresh.astype(feat_dtypes[ell])
+                fresh = fresh.reshape(
+                    fresh.shape[:-3] + (P * topo.slot, dims[ell][0]))
+                new_feat[ell] = self._update_buffer(
+                    buffers["feat"][ell], fresh, pipe.smooth_feat)
+
+        def prep_send(payload):
+            dtype = payload.dtype
+            if pipe.compress_boundary:
+                payload = payload.astype(jnp.bfloat16)
+            return payload, dtype
+
+        # -- forward -------------------------------------------------------
+        # Layer 0's payload is x itself — available before any compute, so
+        # its exchange is issued (or queued) ahead of the loop. For L == 1
+        # the fused pack is complete right away and flushes here too.
+        h = data.x
+        send, send_dtype = prep_send(gather(h, send_idx, send_mask))
+        if fuse:
+            halo = defer_feat(0, send, send_dtype)
+            if L == 1:
+                flush_feat()
+        else:
+            halo = land_feat(0, send, send_dtype)
+
+        for ell in range(L):
+            fin, fout = dims[ell]
+            w, b = params[f"w{ell}"], params[f"b{ell}"]
+            w1 = w[:fin] if sage else w
+            if dropout_rate > 0.0:
+                dkey = jax.random.fold_in(key, ell)
+                dm = backend.dropout_mask(
+                    dkey, dropout_rate, (combined, fin), P)
+            else:
+                dm = None
+            comb = jnp.concatenate([h, halo], axis=-2)
+            if dm is not None:
+                comb = comb * dm
+            order = orders[ell]
+            src = comb @ w1 if order == "transform-first" else comb
+            act = ell < L - 1
+
+            # boundary phase: only rows [rt, max_inner) of raw_b are valid.
+            raw_b = spmm_phase(src, "boundary")
+            tail_b = raw_b[..., rt:, :]
+            u_bt = tail_b + b if order == "transform-first" else tail_b @ w1 + b
+            if sage:
+                u_bt = u_bt + comb[..., rt:max_inner, :] @ w[fin:]
+            h_bt = jax.nn.relu(u_bt) if act else u_bt
+
+            # issue the NEXT layer's exchange between the phases: its
+            # payload rows all live in the tail just produced.
+            if ell + 1 < L:
+                send, send_dtype = prep_send(
+                    gather_tail(h_bt, send_idx, send_mask))
+                if fuse:
+                    halo = defer_feat(ell + 1, send, send_dtype)
+                    if ell + 1 == L - 1:
+                        flush_feat()   # last payload queued -> issue now
+                else:
+                    halo = land_feat(ell + 1, send, send_dtype)
+
+            # interior phase overlaps the in-flight collective.
+            raw_i = spmm_phase(src, "interior")
+            head_i = raw_i[..., :rt, :]
+            if order == "transform-first":
+                u_ih = head_i + b
+                z = None
+            else:
+                u_ih = head_i @ w1 + b
+                z = (jnp.concatenate([head_i, tail_b], axis=-2)
+                     if train else None)
+            if sage:
+                u_ih = u_ih + comb[..., :rt, :] @ w[fin:]
+            u = jnp.concatenate([u_ih, u_bt], axis=-2)
+            residuals.append((comb, z, u, dm))
+            h = jnp.concatenate([jax.nn.relu(u_ih), h_bt], axis=-2) if act else u
+
+        logits = h
+
+        # -- loss ---------------------------------------------------------
+        mask = data.train_mask.astype(logits.dtype)
+        if self.model.multilabel:
+            count_local = jnp.sum(mask) * self.model.num_classes
+        else:
+            count_local = jnp.sum(mask)
+        total = jnp.maximum(backend.psum_scalar(count_local), 1.0)
+        loss_fn = _bce_loss_and_grad if self.model.multilabel else _ce_loss_and_grad
+        loss_local, dlogits = loss_fn(logits, data.labels, mask, total, backend)
+        loss = backend.psum_scalar(loss_local) / total
+
+        if not train:
+            return loss, logits, None, None
+
+        # -- manual backward ----------------------------------------------
+        # Transposed mirror of the forward: the boundary phase of Pᵀ·δ
+        # produces comb rows >= ct — a superset of the halo rows that form
+        # the gradient send — so the exchange is issued (fused: flushed at
+        # the LAST backward layer ell == 1) between the transpose phases.
+        grads = {}
+        new_grad = [None] * L
+        pending_grad = []
+
+        def flush_grad():
+            recvs = backend.fused_exchange([d for _, d, _ in pending_grad])
+            for (ell, _, db_dtype), db_recv in zip(pending_grad, recvs):
+                db_recv = db_recv.astype(db_dtype)
+                fresh_contrib = scatter(db_recv, send_idx, send_mask)
+                new_grad[ell] = self._update_buffer(
+                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+
+        j = dlogits
+        for ell in reversed(range(L)):
+            comb, z, u, dm = residuals[ell]
+            fin, _ = dims[ell]
+            w = params[f"w{ell}"]
+            w1 = w[:fin] if sage else w
+            du = j if ell == L - 1 else j * (u > 0).astype(j.dtype)
+            grads[f"b{ell}"] = backend.psum(jnp.sum(du, axis=-2))
+            if ell == 0:
+                # Alg. 1 stops the backward at layer 0: weight grad only,
+                # no Pᵀ pass under aggregate-first — reuse the unsplit
+                # per-layer backward (need_dcomb=False).
+                if not lead:
+                    gw_local, _, _ = self._layer_backward(
+                        tslice, w, du, comb, z, dm, max_inner,
+                        order=orders[0], need_dcomb=False)
+                else:
+                    bwd = jax.vmap(
+                        lambda ts, du_, comb_, z_, dm_, w_=w:
+                        self._layer_backward(ts, w_, du_, comb_, z_, dm_,
+                                             max_inner, order=orders[0],
+                                             need_dcomb=False),
+                        in_axes=(0, 0, 0, 0 if z is not None else None,
+                                 0 if dm is not None else None))
+                    gw_local, _, _ = bwd(tslice, du, comb, z, dm)
+                grads[f"w{ell}"] = backend.psum(gw_local)
+                new_grad[0] = buffers["grad"][0]
+                break
+
+            order = orders[ell]
+            # ONE dense op ahead of both phases under aggregate-first
+            # (δhw = du·w1ᵀ); transform-first transposes du raw and applies
+            # w1ᵀ per phase (the pre-w1 pieces also feed the weight grad).
+            src_t = du if order == "transform-first" else du @ w1.T
+            if sage:
+                sage_t = du @ w[fin:].T
+
+            # boundary phase: comb rows [ct, combined) valid.
+            raw_tb = spmm_t_phase(src_t, "boundary")
+            dhw_b = raw_tb[..., ct:, :]
+            d_bt = dhw_b @ w1.T if order == "transform-first" else dhw_b
+            if sage:
+                d_bt = d_bt.at[..., :max_inner - ct, :].add(
+                    sage_t[..., ct:, :])
+            if dm is not None:
+                d_bt = d_bt * dm[..., ct:, :]
+
+            # gradient send = the halo rows of the boundary phase; issue
+            # the exchange before the interior phase runs.
+            db = d_bt[..., max_inner - ct:, :]
+            db = db.reshape(db.shape[:-2] + (P, topo.slot, fin))
+            db_dtype = j.dtype if pipe.compress_boundary else db.dtype
+            if pipe.compress_boundary:
+                db = db.astype(jnp.bfloat16)
+            if fuse:
+                pending_grad.append((ell, db, db_dtype))
+                contrib = self._consume_buffer(buffers["grad"][ell])
+                if ell == 1:
+                    flush_grad()   # last backward payload -> issue now
+            else:
+                db_recv = backend.exchange(db)
+                if pipe.compress_boundary:
+                    db_recv = db_recv.astype(j.dtype)
+                fresh_contrib = scatter(db_recv, send_idx, send_mask)
+                if pipe.stale:
+                    contrib = self._consume_buffer(buffers["grad"][ell])
+                    new_grad[ell] = self._update_buffer(
+                        buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+                else:
+                    contrib = fresh_contrib
+                    new_grad[ell] = buffers["grad"][ell]
+
+            # interior phase overlaps the in-flight gradient exchange.
+            raw_ti = spmm_t_phase(src_t, "interior")
+            dhw_i = raw_ti[..., :ct, :]
+            if order == "transform-first":
+                d_ih = dhw_i @ w1.T
+                dhw_full = jnp.concatenate([dhw_i, dhw_b], axis=-2)
+                gw = jnp.swapaxes(comb, -1, -2) @ dhw_full
+            else:
+                d_ih = dhw_i
+                gw = jnp.swapaxes(z, -1, -2) @ du
+            if sage:
+                gw = jnp.concatenate(
+                    [gw, jnp.swapaxes(comb[..., :max_inner, :], -1, -2) @ du],
+                    axis=-2)
+                d_ih = d_ih + sage_t[..., :ct, :]
+            if dm is not None:
+                d_ih = d_ih * dm[..., :ct, :]
+            grads[f"w{ell}"] = backend.psum(gw)
+            j = jnp.concatenate(
+                [d_ih, d_bt[..., :max_inner - ct, :]], axis=-2) + contrib
 
         new_buffers = {"feat": tuple(new_feat), "grad": tuple(new_grad)}
         return loss, logits, grads, new_buffers

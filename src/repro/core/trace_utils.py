@@ -55,6 +55,95 @@ def collective_counts(fn, *args) -> dict[str, int]:
     return count_primitives(jx, ("all_to_all", "psum"))
 
 
+def primitive_event_trace(jaxpr, names) -> list[str]:
+    """The ORDERED sequence of `names` primitives in `jaxpr` — depth-first
+    at each eqn's position (sub-jaxprs of pjit/shard_map/scan expand in
+    place), so the list reflects jaxpr program order. This is what the
+    split-phase schedule checker inspects: trace order is the order XLA
+    receives, so a collective appearing between the boundary- and
+    interior-phase `pallas_call`s proves it was ISSUED between them."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    wanted = set(names)
+    events: list[str] = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in wanted:
+                events.append(eqn.primitive.name)
+            for v in eqn.params.values():
+                for sub in _iter_subjaxprs(v):
+                    walk(sub)
+
+    walk(jaxpr)
+    return events
+
+
+def traced_step_events(fn, *args,
+                       names=("pallas_call", "all_to_all")) -> list[str]:
+    """`primitive_event_trace` of a traced step function."""
+    return primitive_event_trace(jax.make_jaxpr(fn)(*args), names)
+
+
+def expected_split_events(num_layers: int, fused: bool,
+                          train: bool = True) -> list[str]:
+    """The ("pallas_call" | "all_to_all") event sequence of a split-phase
+    step on a TILE engine under aggregate-first ordering (one kernel per
+    phase; the layer-0 backward has no Pᵀ pass, Alg. 1 stops there).
+
+    Forward, per-layer schedule: layer 0's exchange precedes the loop
+    (its payload is x), then each layer runs [boundary kernel, next
+    layer's exchange (if any), interior kernel]. Fused schedule: the one
+    packed exchange is issued right after the LAST payload is gathered —
+    between layer L-2's phases (pre-loop when L == 1). Backward mirrors
+    it transposed down to layer 1, with the fused flush between layer 1's
+    phases. Same collective COUNT as the unsplit schedule in every mode —
+    the split only repositions each collective between a phase pair.
+    """
+    L = num_layers
+    P, A = "pallas_call", "all_to_all"
+    ev: list[str] = []
+    if fused and L == 1:
+        ev += [A]
+    if not fused:
+        ev += [A]
+    for ell in range(L):
+        ev += [P]
+        if fused:
+            if L > 1 and ell == L - 2:
+                ev += [A]
+        elif ell < L - 1:
+            ev += [A]
+        ev += [P]
+    if not train:
+        return ev
+    for ell in reversed(range(1, L)):
+        ev += [P]
+        if (not fused) or ell == 1:
+            ev += [A]
+        ev += [P]
+    return ev
+
+
+def check_split_schedule(model, mesh, topo, data, axis_name="parts",
+                         train: bool = True) -> list[str]:
+    """Trace a split-phase `make_spmd_step` and assert its boundary
+    collectives sit BETWEEN the phase kernels exactly as scheduled
+    (`expected_split_events`). Returns the traced event list."""
+    step = model.make_spmd_step(mesh, topo, axis_name, train=train)
+    params = model.init_params(jax.random.PRNGKey(0))
+    buffers = model.init_buffers(topo)
+    events = traced_step_events(step, topo, params, buffers, data,
+                                jax.random.PRNGKey(0))
+    expected = expected_split_events(model.model.num_layers,
+                                     model.pipe.fused, train=train)
+    if events != expected:
+        raise AssertionError(
+            f"split-phase schedule mismatch:\n  traced   {events}\n"
+            f"  expected {expected}")
+    return events
+
+
 def expected_boundary_collectives(num_layers: int, fused: bool,
                                   train: bool = True) -> int:
     """The collective-count math of the two communication schedules.

@@ -67,7 +67,8 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
     same model under shard_map — partitions need only be a multiple of the
     mesh size (multi-partition-per-device SPMD). Eval stays on the sim
     backend either way (global arrays round-trip between backends)."""
-    model = PipeGCN(model_cfg, pipe_cfg)
+    split = pipeline.split_spec() if hasattr(pipeline, "split_spec") else None
+    model = PipeGCN(model_cfg, pipe_cfg, split=split)
     topo = pipeline.topo
     # Fail fast (before tracing) if the selected aggregation engine needs
     # Topology fields the pipeline was not built with.
@@ -94,7 +95,21 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
                  f"{n_coll} boundary exchanges/train step, local on the "
                  "sim backend")
         log(f"comm schedule: {sched} ({where}, L={model_cfg.num_layers})")
-        orders = model.layer_orders(topo, train=True)
+        sp = model._split_active()
+        if sp is not None:
+            log(f"overlap schedule: split-phase (fwd boundary "
+                f"{sp.fwd_bnd_tiles} tiles @ rows>={sp.row_tail}, "
+                f"transpose boundary {sp.t_bnd_tiles} tiles @ "
+                f"cols>={sp.col_tail}; collectives issued between phases)")
+        else:
+            why = ("disabled" if pipe_cfg.overlap == "none" else
+                   "no feasible split" if split is None else
+                   f"engine {model_cfg.agg!r} has no tile phases")
+            log(f"overlap schedule: unsplit ({why})")
+        # under the split the fused epilogue is bypassed, so report the
+        # orders the split step actually resolves (fused=False pricing)
+        orders = model.layer_orders(topo, train=True,
+                                    fused=False if sp is not None else None)
         how = ("static FLOP model" if model_cfg.matmul_order == "auto"
                else "forced")
         log(f"matmul order ({how}, agg={model_cfg.agg}): "

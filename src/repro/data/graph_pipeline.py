@@ -98,6 +98,16 @@ class GraphDataPipeline:
                 eval_mask=jnp.asarray(pg.pack_nodes(np.asarray(ds.test_mask)))),
             agg=agg, layout=layout)
 
+    def split_spec(self):
+        """`SplitSpec` of this pipeline's partitioned graph for the
+        split-phase overlap schedule (`PipeConfig.overlap`), or None when
+        the split is infeasible (single partition, no boundary sends, or a
+        layout whose boundary rows are not clustered into a tail — e.g.
+        "natural"). Memoized with the tile extraction on `pg`, so calling
+        this after `build` costs nothing for tile-engine pipelines."""
+        from repro.core.pipegcn import split_spec_from
+        return split_spec_from(self.pg)
+
     def device_layout(self, num_devices: int):
         """Explicit (n_dev, n_local, ...) per-device view of (topo, data)
         for num_devices hosts — the physical layout `make_spmd_step` induces

@@ -122,9 +122,47 @@ class PartitionTiles:
     t_in: np.ndarray      # (P, n_tiles) int32 Pᵀ input block
     t_perm: np.ndarray    # (P, n_tiles) int32 per-partition index into vals
 
+    # Interior/boundary phase split of the streams (split-phase overlap
+    # schedule). None when the split is structurally infeasible (no sends,
+    # or boundary rows start in row block 0 on every partition) — the
+    # streams then carry the plain tail padding and only the unsplit
+    # schedule may consume them. When set, the LAST fwd_bnd (t_bnd) slots
+    # of every partition's forward (transpose) stream are exactly the
+    # tiles with row block >= b0 (col block >= hb0) — uniform cut points,
+    # enforced by the phase-aware group padding.
+    b0: int | None = None       # first boundary row block (fwd phases)
+    hb0: int | None = None      # first boundary col block (transpose phases)
+    fwd_bnd: int | None = None  # boundary-suffix tiles, forward stream
+    t_bnd: int | None = None    # boundary-suffix tiles, transpose stream
+
     @property
     def n_tiles(self) -> int:
         return self.rows.shape[1]
+
+
+def boundary_row_split(pg: "PartitionedGraph", tile: int = 128) -> dict:
+    """Interior/boundary row split of each partition's reordered node range.
+
+    `first_send[i]` is the lowest local row partition i ever sends (== the
+    head of its halo-clustered tail run under the rcm layout; scattered —
+    usually 0 — under the natural layout). The split-phase schedule cuts
+    uniformly at row block ``b0 = min_i first_send[i] // tile`` (forward)
+    and col block ``hb0 = max_inner // tile`` (transpose: everything at or
+    above the last full inner block feeds the gradient send or the halo).
+    Partitions with no sends at all report first_send = max_inner and do
+    not constrain b0 (degenerate single-partition case: every first_send
+    is max_inner and `feasible` is False).
+    """
+    firsts = []
+    for i in range(pg.num_parts):
+        rows = pg.send_idx[:, i, :][pg.send_mask[:, i, :]]
+        firsts.append(int(rows.min()) if rows.size else pg.max_inner)
+    has_sends = bool(pg.send_mask.any())
+    b0 = min(f // tile for f in firsts)
+    hb0 = pg.max_inner // tile
+    return {"first_send": firsts, "b0": b0, "hb0": hb0, "tile": tile,
+            "feasible": has_sends and b0 >= 1 and hb0 >= 1
+            and b0 * tile < pg.max_inner}
 
 
 def extract_partition_tiles(pg: "PartitionedGraph",
@@ -140,9 +178,20 @@ def extract_partition_tiles(pg: "PartitionedGraph",
     shards are immutable after build, and one process routinely constructs
     several engines over the same graph (trainer + eval + dryrun +
     benchmark sweeps), which would otherwise re-extract identical tiles.
+
+    When the interior/boundary split is structurally feasible (see
+    `boundary_row_split`) the cross-partition padding is PHASE-AWARE: each
+    partition's streams are padded per phase group, so the boundary suffix
+    starts at the same static slot everywhere and the split-phase overlap
+    schedule can slice it with trace-time constants. The padded streams
+    remain valid for the unsplit kernels (zero tiles, run grouping
+    intact), so split and unsplit schedules share one topology
+    bit-identically. Infeasible graphs fall back to the plain tail
+    padding and report `fwd_bnd is None`.
     """
     from repro.kernels.gcn_spmm import (TILE, build_tile_topology,
-                                        pad_tile_topology)
+                                        pad_tile_topology,
+                                        pad_tile_topology_phased)
     tile = TILE if tile is None else tile
     cached = pg.tile_cache.get(tile)
     if cached is not None:
@@ -150,15 +199,36 @@ def extract_partition_tiles(pg: "PartitionedGraph",
     per = [build_tile_topology(pg.edge_row[i], pg.edge_col[i], pg.edge_w[i],
                                pg.max_inner, pg.combined, tile)
            for i in range(pg.num_parts)]
-    n_tiles = max(tt.n_tiles for tt in per)
-    per = [pad_tile_topology(tt, n_tiles) for tt in per]
+    split = boundary_row_split(pg, tile)
+    meta: dict = dict(b0=None, hb0=None, fwd_bnd=None, t_bnd=None)
+    if split["feasible"]:
+        b0, hb0 = split["b0"], split["hb0"]
+        cuts_f = [int(np.searchsorted(tt.rows, b0)) for tt in per]
+        cuts_t = [int(np.searchsorted(tt.t_out, hb0)) for tt in per]
+        n_int_f = max(cuts_f)
+        n_bnd_f = max(tt.n_tiles - c for tt, c in zip(per, cuts_f))
+        n_int_t = max(cuts_t)
+        n_bnd_t = max(tt.n_tiles - c for tt, c in zip(per, cuts_t))
+        # Both streams of one partition share the vals storage, so their
+        # padded totals must agree; absorb the difference into the larger
+        # schedule's interior group (pads there are cheapest to place).
+        n_tiles = max(n_int_f + n_bnd_f, n_int_t + n_bnd_t)
+        n_int_f += n_tiles - (n_int_f + n_bnd_f)
+        n_int_t += n_tiles - (n_int_t + n_bnd_t)
+        per = [pad_tile_topology_phased(tt, b0, hb0, n_int_f, n_bnd_f,
+                                        n_int_t, n_bnd_t) for tt in per]
+        meta = dict(b0=b0, hb0=hb0, fwd_bnd=n_bnd_f, t_bnd=n_bnd_t)
+    else:
+        n_tiles = max(tt.n_tiles for tt in per)
+        per = [pad_tile_topology(tt, n_tiles) for tt in per]
     out = PartitionTiles(
         rows=np.stack([tt.rows for tt in per]),
         cols=np.stack([tt.cols for tt in per]),
         vals=np.stack([tt.vals for tt in per]),
         t_out=np.stack([tt.t_out for tt in per]),
         t_in=np.stack([tt.t_in for tt in per]),
-        t_perm=np.stack([tt.t_perm for tt in per]))
+        t_perm=np.stack([tt.t_perm for tt in per]),
+        **meta)
     pg.tile_cache[tile] = out
     return out
 

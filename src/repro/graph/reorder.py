@@ -136,6 +136,40 @@ def rcm_order(indptr: np.ndarray, indices: np.ndarray) -> np.ndarray:
     return out[::-1].copy()
 
 
+def boundary_mask(prop: CSRGraph, part: np.ndarray) -> np.ndarray:
+    """(N,) bool: nodes incident to at least one real cut edge in either
+    direction — they consume halo columns and/or are gathered into a
+    peer's halo. Under the rcm layout these are exactly the nodes packed
+    into each partition's contiguous tail run, i.e. the rows the
+    split-phase schedule's boundary phase must produce before the
+    exchange can be issued."""
+    part = np.asarray(part, dtype=np.int64)
+    n = prop.num_nodes
+    dst = np.repeat(np.arange(n, dtype=np.int64), np.diff(prop.indptr))
+    src = prop.indices.astype(np.int64)
+    cross = (part[dst] != part[src]) & (prop.weights != 0)
+    out = np.zeros(n, dtype=bool)
+    out[dst[cross]] = True       # consumes halo columns
+    out[src[cross]] = True       # gathered into a peer's halo
+    return out
+
+
+def interior_boundary_counts(prop: CSRGraph, part: np.ndarray,
+                             num_parts: int) -> list[tuple[int, int]]:
+    """Per-partition (interior, boundary) node counts — the layout-level
+    view of how much aggregation work the split-phase schedule can
+    overlap with the exchange (interior share) vs must run before
+    issuing it (boundary tail)."""
+    part = np.asarray(part, dtype=np.int64)
+    bnd = boundary_mask(prop, part)
+    out = []
+    for i in range(num_parts):
+        m = part == i
+        b = int(np.count_nonzero(bnd & m))
+        out.append((int(np.count_nonzero(m)) - b, b))
+    return out
+
+
 def partition_orders(prop: CSRGraph, part: np.ndarray,
                      num_parts: int) -> list[np.ndarray]:
     """Per-partition node orders (arrays of GLOBAL ids, new local order).
@@ -152,10 +186,7 @@ def partition_orders(prop: CSRGraph, part: np.ndarray,
     dst = np.repeat(np.arange(n, dtype=np.int64), np.diff(prop.indptr))
     src = prop.indices.astype(np.int64)
     real = prop.weights != 0
-    cross = (part[dst] != part[src]) & real
-    is_boundary = np.zeros(n, dtype=bool)
-    is_boundary[dst[cross]] = True       # consumes halo columns
-    is_boundary[src[cross]] = True       # gathered into a peer's halo
+    is_boundary = boundary_mask(prop, part)
 
     # Group intra-partition edges (and nodes) by owner ONCE — per-partition
     # masks over the global edge arrays would make the build O(P·E).

@@ -50,6 +50,15 @@ def _ceil_to(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
+def _phase_mask(in_boundary, phase: str):
+    """Edge-level phase membership from a boundary predicate."""
+    if phase == "boundary":
+        return in_boundary
+    if phase == "interior":
+        return ~in_boundary
+    raise ValueError(f"phase must be 'boundary' or 'interior', got {phase!r}")
+
+
 def _pad2(x, rows: int, cols: int):
     """Zero-pad a 2-D array up to (rows, cols), skipping the op entirely
     when the shape already matches (the common case after topology padding:
@@ -90,6 +99,20 @@ class AggregationEngine:
         dz intermediate round-trips through HBM."""
         return self.spmm_t(tslice, du @ w.T, num_cols)
 
+    def spmm_phased(self, tslice, comb, num_rows: int, split, phase: str):
+        """One phase of z = P·comb under the split-phase overlap schedule
+        (`split` is a kernels.gcn_spmm.SplitSpec, `phase` is "boundary" |
+        "interior"). Contract shared by all engines: rows OUTSIDE the
+        phase (below split.row_tail for "boundary", at/above it for
+        "interior") are unspecified; each phase's own rows are
+        bit-identical to the unsplit `spmm` on the same inputs."""
+        raise NotImplementedError
+
+    def spmm_t_phased(self, tslice, dz, num_cols: int, split, phase: str):
+        """One phase of δcomb = Pᵀ·δz; the phase cut is at
+        split.col_tail. Same unspecified-rows contract as spmm_phased."""
+        raise NotImplementedError
+
 
 class CooEngine(AggregationEngine):
     """Padded-COO aggregation via segment_sum (scatter-add)."""
@@ -105,6 +128,25 @@ class CooEngine(AggregationEngine):
     def spmm_t(self, tslice, dz, num_cols: int):
         edge_row, edge_col, edge_w = tslice
         vals = dz[edge_row] * edge_w[:, None]
+        return jax.ops.segment_sum(vals, edge_col, num_segments=num_cols)
+
+    # Phased variants compose via index masks rather than stream slices:
+    # out-of-phase edges get weight 0, so each phase's own rows see the
+    # IDENTICAL segment_sum term sequence as the unsplit call (zeroed
+    # terms add exact 0.0) — bitwise parity engine-cross-engine with the
+    # tile engines' sliced streams, which is what the SPMD parity matrix
+    # gates on. Out-of-phase rows come out zero (a valid value for
+    # "unspecified").
+    def spmm_phased(self, tslice, comb, num_rows: int, split, phase: str):
+        edge_row, edge_col, edge_w = tslice
+        keep = _phase_mask(edge_row >= split.row_tail, phase)
+        vals = comb[edge_col] * jnp.where(keep, edge_w, 0)[:, None]
+        return jax.ops.segment_sum(vals, edge_row, num_segments=num_rows)
+
+    def spmm_t_phased(self, tslice, dz, num_cols: int, split, phase: str):
+        edge_row, edge_col, edge_w = tslice
+        keep = _phase_mask(edge_col >= split.col_tail, phase)
+        vals = dz[edge_row] * jnp.where(keep, edge_w, 0)[:, None]
         return jax.ops.segment_sum(vals, edge_col, num_segments=num_cols)
 
 
@@ -151,13 +193,46 @@ class BlockSparseEngine(AggregationEngine):
         assert d.shape == (cpad, fpad), (d.shape, cpad, fpad)
         return d[:num_cols, :f]
 
+    # Phased variants: static suffix/prefix slices of the streams (the
+    # phase-aware topology padding makes the cut uniform across
+    # partitions). Tiles of one output block live entirely in one phase,
+    # so each phase's own rows are BITWISE the unsplit result — same
+    # tiles, same accumulation order. Out-of-phase rows are unwritten
+    # kernel output (garbage, never to be read).
+    def spmm_phased(self, tslice, comb, num_rows: int, split, phase: str):
+        tile_rows, tile_cols = tslice[:2]
+        combined, f = comb.shape
+        rpad = _ceil_to(num_rows, TILE)
+        fpad = _ceil_to(f, FEAT_BLOCK)
+        combp = _pad2(comb, _ceil_to(combined, TILE), fpad)
+        z = ops.spmm_phased(tile_rows, tile_cols, self._vals(tslice, comb),
+                            combp, rpad, split.fwd_bnd_tiles, phase)
+        assert z.shape == (rpad, fpad), (z.shape, rpad, fpad)
+        return z[:num_rows, :f]
+
+    def spmm_t_phased(self, tslice, dz, num_cols: int, split, phase: str):
+        t_out, t_in, t_perm = tslice[3:]
+        num_rows, f = dz.shape
+        cpad = _ceil_to(num_cols, TILE)
+        fpad = _ceil_to(f, FEAT_BLOCK)
+        dzp = _pad2(dz, _ceil_to(num_rows, TILE), fpad)
+        d = ops.spmm_t_phased(t_out, t_in, t_perm, self._vals(tslice, dz),
+                              dzp, cpad, split.t_bnd_tiles, phase)
+        assert d.shape == (cpad, fpad), (d.shape, cpad, fpad)
+        return d[:num_cols, :f]
+
 
 class FusedBlockSparseEngine(BlockSparseEngine):
     """Blocksparse tiles + fused aggregate⊗transform Pallas kernels.
 
     The primitive spmm/spmm_t (used by the transform-first ordering) are
     inherited; the `aggregate_transform*` pair runs the single-pass fused
-    kernels, in the caller's dtype like the parent.
+    kernels, in the caller's dtype like the parent. The phased variants
+    are inherited too: under the split-phase overlap schedule the layer
+    falls back to the composed (aggregate, then dense transform) path —
+    the fused epilogue would write out-of-phase garbage rows through the
+    dense weight — and the cost model is told `fused=False` accordingly
+    (see PipeGCN.layer_orders).
     """
 
     name = "fused"

@@ -219,6 +219,106 @@ def spmm_block_sparse_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
 
 
 # ----------------------------------------------------------------------
+# Split-phase entry points: boundary tiles first, interior tiles second,
+# so the boundary exchange can be issued between the two pallas_calls.
+# ----------------------------------------------------------------------
+
+class SplitSpec(NamedTuple):
+    """Static description of the interior/boundary phase split of one
+    partitioned graph's tile streams (uniform across partitions — the
+    phase-aware padding in `pad_tile_topology_phased` makes it so).
+
+    The RCM+halo-clustered layout (graph/reorder.py) packs every
+    boundary-destined row into one contiguous tail run per partition, so a
+    row threshold splits the forward stream and a column threshold splits
+    the transpose stream. All four fields are plain python ints: phase
+    boundaries are trace-time constants, the phased kernels below are
+    ordinary static slices of the prefetched streams.
+    """
+
+    row_tail: int       # first forward boundary-phase output row (B0·T)
+    col_tail: int       # first transpose boundary-phase output row (HB0·T)
+    fwd_bnd_tiles: int  # boundary-suffix length of the forward stream
+    t_bnd_tiles: int    # boundary-suffix length of the transpose stream
+
+
+def spmm_block_sparse_phased(tile_rows, tile_cols, tile_vals, h,
+                             num_rows: int, n_bnd: int, phase: str,
+                             interpret: bool | None = None):
+    """One phase of z = P·h: the boundary phase runs the last `n_bnd`
+    stream slots (output row blocks ≥ row_tail//T — the halo-clustered
+    tail runs), the interior phase runs the rest. The output has the FULL
+    (num_rows, f) shape but only the phase's own row blocks are written:
+    rows outside the phase are UNSPECIFIED (not zero) and must never be
+    read — callers combine the two phases' row ranges before any
+    cross-row reduction. Running boundary then interior touches each
+    output block exactly once, so the pair costs the same tile work as
+    one unsplit pass.
+    """
+    n = tile_rows.shape[0]
+    if not 0 < n_bnd < n:
+        raise ValueError(f"phase split needs 0 < n_bnd < n_tiles, got "
+                         f"{n_bnd}/{n}")
+    sl = _phase_slice(n, n_bnd, phase)
+    return spmm_block_sparse(tile_rows[sl], tile_cols[sl], tile_vals[sl],
+                             h, num_rows, interpret)
+
+
+def spmm_block_sparse_t_phased(t_out, t_in, t_perm, tile_vals, dz,
+                               num_cols: int, n_bnd: int, phase: str,
+                               interpret: bool | None = None):
+    """One phase of δcomb = Pᵀ·δz. The transpose boundary phase is the
+    last `n_bnd` slots of the column-major stream: output rows ≥
+    col_tail — the inner tail feeding the gradient send plus the halo
+    rows themselves. `tile_vals` is passed whole (t_perm indexes the full
+    array); only the slot streams are sliced. Same unspecified-rows
+    contract as the forward phases.
+    """
+    n = t_out.shape[0]
+    if not 0 < n_bnd < n:
+        raise ValueError(f"phase split needs 0 < n_bnd < n_tiles, got "
+                         f"{n_bnd}/{n}")
+    sl = _phase_slice(n, n_bnd, phase)
+    return spmm_block_sparse_t(t_out[sl], t_in[sl], t_perm[sl], tile_vals,
+                               dz, num_cols, interpret)
+
+
+def _phase_slice(n: int, n_bnd: int, phase: str) -> slice:
+    if phase == "boundary":
+        return slice(n - n_bnd, n)
+    if phase == "interior":
+        return slice(0, n - n_bnd)
+    raise ValueError(f"phase must be 'boundary' or 'interior', got {phase!r}")
+
+
+def boundary_rdma_supported() -> bool:
+    """Whether the in-kernel RDMA boundary push is available. The split
+    schedule itself is backend-agnostic (the collective is issued between
+    the two phases either way); on real TPU the send can additionally be
+    initiated from inside the boundary-phase kernel via
+    `start_boundary_rdma` so it overlaps even the boundary flush."""
+    return jax.default_backend() == "tpu"
+
+
+def start_boundary_rdma(src_ref, dst_ref, send_sem, recv_sem, neighbor):
+    """Start an async device-to-device copy of gathered boundary rows
+    (TPU-only follow-up path; the interpret-mode schedule uses the XLA
+    collective between the phases instead). Returns the started copy —
+    callers `.wait()` at the next sync point, after the interior phase.
+    """
+    if not boundary_rdma_supported():
+        raise NotImplementedError(
+            "in-kernel RDMA needs a real TPU backend; the split-phase "
+            "schedule falls back to the XLA collective between phases")
+    copy = pltpu.make_async_remote_copy(
+        src_ref=src_ref, dst_ref=dst_ref, send_sem=send_sem,
+        recv_sem=recv_sem, device_id=(neighbor,),
+        device_id_type=pltpu.DeviceIdType.LOGICAL)
+    copy.start()
+    return copy
+
+
+# ----------------------------------------------------------------------
 # Fused aggregate+transform kernels: the dense weight contraction happens
 # in the SAME grid pass as the block-sparse aggregation, so the
 # (rows, F_in)-sized intermediates (z forward, du·Wᵀ backward) never
@@ -518,6 +618,78 @@ def pad_tile_topology(tt: TileTopology, n_tiles: int) -> TileTopology:
         t_in=np.concatenate([tt.t_in, np.zeros(k, np.int32)]),
         t_perm=np.concatenate([tt.t_perm, pad_i]),
         num_row_blocks=tt.num_row_blocks, num_col_blocks=tt.num_col_blocks)
+
+
+def pad_tile_topology_phased(tt: TileTopology, b0: int, hb0: int,
+                             n_int_f: int, n_bnd_f: int,
+                             n_int_t: int, n_bnd_t: int) -> TileTopology:
+    """Pad each PHASE GROUP of both streams independently to the given
+    uniform lengths (cross-partition maxima), so the interior/boundary
+    suffix split lands at the same static slot in every partition's
+    stream and the phased kernels can slice with trace-time constants.
+
+    The forward stream is cut at the first slot with row block ≥ `b0`,
+    the transpose stream at the first slot with col block ≥ `hb0`. Pads
+    are zero tiles appended at the END of their group, addressed at the
+    group's LAST output block so run grouping stays intact in both
+    streams (interior fwd pads: row b0-1; boundary fwd pads: row nrb-1;
+    interior transpose pads: col hb0-1; boundary transpose pads: col
+    ncb-1 — every output block carries ≥1 real-or-filler tile, so those
+    runs exist). A pad occupies one slot in EACH stream; its (row, col)
+    pair is chosen from the four group combinations so both streams pad
+    to their target group lengths with one shared vals entry. The
+    concatenated [interior; boundary] streams remain valid inputs for
+    the unsplit kernels — zero tiles add exact 0.0, so split and unsplit
+    schedules on the same padded topology are bit-identical.
+    """
+    cut_f = int(np.searchsorted(tt.rows, b0))
+    cut_t = int(np.searchsorted(tt.t_out, hb0))
+    fi = n_int_f - cut_f                       # fwd interior pads
+    fb = n_bnd_f - (tt.n_tiles - cut_f)        # fwd boundary pads
+    ti = n_int_t - cut_t                       # transpose interior pads
+    tb = n_bnd_t - (tt.n_tiles - cut_t)        # transpose boundary pads
+    if min(fi, fb, ti, tb) < 0 or fi + fb != ti + tb:
+        raise ValueError(f"inconsistent phase pad targets: "
+                         f"{(fi, fb, ti, tb)} for {tt.n_tiles} tiles")
+    if fi + fb == 0:
+        return tt
+    # Pair the group memberships: bb pads sit in both boundary groups,
+    # then leftovers pair boundary-with-interior, the rest is (int, int).
+    bb = min(fb, tb)
+    bi = fb - bb            # (fwd boundary, transpose interior)
+    ib = tb - bb            # (fwd interior, transpose boundary)
+    ii = fi - ib
+    tile = tt.vals.shape[-1]
+    nrb, ncb = tt.num_row_blocks, tt.num_col_blocks
+    # Pad coordinates in fwd-stream placement order: interior group tail
+    # first (ii + ib pads), then boundary group tail (bi + bb pads).
+    pad_rows = np.array([b0 - 1] * (ii + ib) + [nrb - 1] * (bi + bb),
+                        np.int32)
+    pad_cols = np.array([hb0 - 1] * ii + [ncb - 1] * ib
+                        + [hb0 - 1] * bi + [ncb - 1] * bb, np.int32)
+    rows = np.concatenate([tt.rows[:cut_f], pad_rows[:fi],
+                           tt.rows[cut_f:], pad_rows[fi:]])
+    cols = np.concatenate([tt.cols[:cut_f], pad_cols[:fi],
+                           tt.cols[cut_f:], pad_cols[fi:]])
+    zi = np.zeros((fi, tile, tile), np.float32)
+    zb = np.zeros((fb, tile, tile), np.float32)
+    vals = np.concatenate([tt.vals[:cut_f], zi, tt.vals[cut_f:], zb])
+    # Original slot i of the unpadded vals now lives at remap[i]; pads at
+    # pad_idx (fwd placement order, aligned with pad_rows/pad_cols).
+    remap = np.arange(tt.n_tiles, dtype=np.int64)
+    remap[cut_f:] += fi
+    pad_idx = np.concatenate([
+        np.arange(cut_f, cut_f + fi, dtype=np.int64),
+        np.arange(tt.n_tiles + fi, tt.n_tiles + fi + fb, dtype=np.int64)])
+    t_int_pads = np.concatenate([pad_idx[:ii], pad_idx[fi:fi + bi]])
+    t_bnd_pads = np.concatenate([pad_idx[ii:fi], pad_idx[fi + bi:]])
+    t_perm = np.concatenate([remap[tt.t_perm[:cut_t]], t_int_pads,
+                             remap[tt.t_perm[cut_t:]],
+                             t_bnd_pads]).astype(np.int32)
+    return TileTopology(
+        rows=rows, cols=cols, vals=vals,
+        t_out=cols[t_perm], t_in=rows[t_perm], t_perm=t_perm,
+        num_row_blocks=nrb, num_col_blocks=ncb)
 
 
 def build_tiles(dense_or_coo, num_rows: int, num_cols: int,

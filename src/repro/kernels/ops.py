@@ -34,6 +34,26 @@ def spmm_t(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
                                      num_cols, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("num_rows", "n_bnd", "phase", "interpret"))
+def spmm_phased(tile_rows, tile_cols, tile_vals, h, num_rows: int,
+                n_bnd: int, phase: str, interpret: bool | None = None):
+    """One phase (interior | boundary) of z = P·h — static suffix/prefix
+    slice of the tile stream; out-of-phase rows are unspecified (see
+    gcn_spmm.spmm_block_sparse_phased)."""
+    return _spmm.spmm_block_sparse_phased(tile_rows, tile_cols, tile_vals,
+                                          h, num_rows, n_bnd, phase,
+                                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("num_cols", "n_bnd", "phase", "interpret"))
+def spmm_t_phased(t_out, t_in, t_perm, tile_vals, dz, num_cols: int,
+                  n_bnd: int, phase: str, interpret: bool | None = None):
+    """One phase of δcomb = Pᵀ·δz (see gcn_spmm.spmm_block_sparse_t_phased)."""
+    return _spmm.spmm_block_sparse_t_phased(t_out, t_in, t_perm, tile_vals,
+                                            dz, num_cols, n_bnd, phase,
+                                            interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("num_rows", "relu", "with_z", "interpret"))
 def spmm_fused(tile_rows, tile_cols, tile_vals, h, w, b, num_rows: int,
                relu: bool = False, with_z: bool = True,

@@ -64,7 +64,7 @@ def synthetic_topology_sds(mesh, sizes) -> tuple:
 
 def dryrun_pipegcn(multi_pod: bool, variant: str = "pipegcn",
                    sizes=None, compress: bool = False,
-                   fuse: bool = True) -> dict:
+                   fuse: bool = True, overlap: str = "auto") -> dict:
     import dataclasses
     mesh = make_production_mesh(multi_pod=multi_pod)
     sizes = sizes or (SMALL if multi_pod else PROD)
@@ -77,8 +77,21 @@ def dryrun_pipegcn(multi_pod: bool, variant: str = "pipegcn",
                      num_classes=sizes["num_classes"], dropout=0.0)
     pc = dataclasses.replace(PipeConfig.named(variant),
                              compress_boundary=compress,
-                             fuse_exchange=fuse)
-    model = PipeGCN(mc, pc)
+                             fuse_exchange=fuse, overlap=overlap)
+    split = None
+    if overlap == "split-phase":
+        # Synthetic split spec mirroring what split_spec_from derives from a
+        # real rcm-layout graph: the boundary tail is the last row block,
+        # the transpose cut sits at the last full inner block. The COO
+        # engine's phased path only reads the row/col cuts, so the tile
+        # counts are placeholders here.
+        from repro.kernels.gcn_spmm import TILE, SplitSpec
+        mi = sizes["max_inner"]
+        hb0 = mi // TILE
+        split = SplitSpec(row_tail=max(hb0 - 1, 1) * TILE,
+                          col_tail=hb0 * TILE,
+                          fwd_bnd_tiles=1, t_bnd_tiles=1)
+    model = PipeGCN(mc, pc, split=split)
     params_sds = jax.eval_shape(
         lambda: model.init_params(jax.random.PRNGKey(0)))
     params_sds = jax.tree.map(
@@ -111,6 +124,25 @@ def dryrun_pipegcn(multi_pod: bool, variant: str = "pipegcn",
     result["boundary_collectives_per_step"] = counts["all_to_all"]
     result["boundary_collectives_expected"] = expected_boundary_collectives(
         mc.num_layers, pc.fused, train=True)
+    # traced overlap schedule: phase sizes + where the collectives sit in
+    # the (aggregation scatter | exchange) event stream. The split only
+    # repositions collectives — counts above must be unchanged either way.
+    result["overlap"] = pc.overlap
+    if model._split_active() is not None:
+        from repro.core.trace_utils import traced_step_events
+        mi = sizes["max_inner"]
+        result["overlap_phase_rows"] = {
+            "row_tail": split.row_tail,
+            "fwd_boundary_rows": mi - split.row_tail,
+            "fwd_interior_rows": split.row_tail,
+            "col_tail": split.col_tail,
+            "t_boundary_rows": mi - split.col_tail + n * sizes["slot"],
+        }
+        # COO engine: each phase is one segment_sum (a scatter-add eqn), so
+        # an all_to_all between two scatter-adds was issued mid-layer.
+        result["overlap_events"] = traced_step_events(
+            step, topo_sds, params_sds, bufs_sds, data_sds, key_sds,
+            names=("scatter-add", "all_to_all"))
     mem = compiled.memory_analysis()
     if mem is not None:
         result["bytes_per_device"] = int(
@@ -156,18 +188,29 @@ def main():
                          "instead of the fused-deferred schedule (2)")
     ap.add_argument("--both", action="store_true",
                     help="also run the vanilla baseline for comparison")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "none", "split-phase"],
+                    help="split-phase overlap schedule: boundary phase, "
+                         "issue exchange, interior phase behind it (the "
+                         "dry-run synthesizes the split spec and reports "
+                         "the traced phase sizes + collective positions)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     variants = [args.variant] + (["vanilla"] if args.both else [])
     results = []
     for v in variants:
         r = dryrun_pipegcn(args.multi_pod, v, compress=args.compress,
-                           fuse=not args.no_fuse)
+                           fuse=not args.no_fuse, overlap=args.overlap)
         results.append(r)
         print(f"[pipegcn dryrun OK] variant={v} chips={r['chips']} "
               f"bottleneck={r['bottleneck']} "
               f"boundary_colls={r['boundary_collectives_per_step']} "
+              f"overlap={r['overlap']} "
               f"coll={r['collective_total_bytes']:,}B", flush=True)
+        if "overlap_events" in r:
+            print(f"  overlap schedule: phases {r['overlap_phase_rows']} "
+                  f"events {' '.join('A' if e == 'all_to_all' else 'S' for e in r['overlap_events'])}",
+                  flush=True)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         json.dump(results, open(args.out, "w"), indent=1)

@@ -50,7 +50,8 @@ def run_gcn(args) -> dict:
                      layout=pipeline.layout)
     import dataclasses
     pc = dataclasses.replace(PipeConfig.named(args.variant, gamma=args.gamma),
-                             fuse_exchange=not args.no_fuse_exchange)
+                             fuse_exchange=not args.no_fuse_exchange,
+                             overlap=args.overlap)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
                         eval_every=args.eval_every, log=print, mesh=mesh)
@@ -62,6 +63,8 @@ def run_gcn(args) -> dict:
            "matmul_order": args.matmul_order,
            "layout": pipeline.layout,
            "fuse_exchange": pc.fuse_exchange,
+           "overlap": pc.overlap,
+           "split_feasible": pipeline.split_spec() is not None,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
     if args.ckpt_dir:
@@ -150,6 +153,13 @@ def main():
                     help="co-resident partitions per device for --spmd "
                          "(partitions must be a multiple; mesh size = "
                          "partitions // parts_per_device)")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "none", "split-phase"],
+                    help="split-phase exchange/compute overlap: run the "
+                         "boundary-tile phase first, issue the collective, "
+                         "and compute the interior phase while it is in "
+                         "flight; auto = on iff the layout clusters a "
+                         "boundary tail and --agg consumes tiles")
     ap.add_argument("--no-fuse-exchange", action="store_true",
                     help="revert stale variants to the blocking per-layer "
                          "boundary exchange (2L-1 collectives/step instead "

@@ -42,6 +42,12 @@ except ImportError:
             return _Strategy(
                 lambda rng: elements[int(rng.integers(0, len(elements)))])
 
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [elem.draw(rng) for _ in range(
+                    int(rng.integers(min_size, max_size + 1)))])
+
     st = _Strategies()
     strategies = st
 

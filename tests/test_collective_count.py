@@ -103,6 +103,48 @@ def test_single_layer_fused_has_no_backward_collective(tiny_pipeline):
     assert got["all_to_all"] == 1, got
 
 
+@pytest.fixture(scope="module")
+def grid_pipeline():
+    """Lattice pipeline with a feasible split (rcm halo-clustered tail) —
+    the regime where the split-phase overlap schedule activates."""
+    from repro.data.graph_pipeline import GraphDataPipeline
+    return GraphDataPipeline.build("grid-tiny", P, kind="sage",
+                                   agg="blocksparse", layout="rcm")
+
+
+def _overlap_model(pipeline, num_layers, **pipe_kw):
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=16, num_layers=num_layers,
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0,
+                     agg="blocksparse", layout="rcm")
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"),
+                             overlap="split-phase", **pipe_kw)
+    return PipeGCN(mc, pc, split=pipeline.split_spec())
+
+
+@pytest.mark.parametrize("num_layers", [1, 2, 3])
+@pytest.mark.parametrize("fuse", [True, False])
+def test_overlap_preserves_collective_counts(grid_pipeline, num_layers,
+                                             fuse):
+    """The split-phase schedule REPOSITIONS each boundary collective (to
+    between the phase kernels) but must never change how many there are:
+    same 2-fused / 2L-1-per-layer table as the unsplit schedule. L=1 is
+    the edge cell — the fused backward exchange vanishes (1 collective),
+    split or not."""
+    model = _overlap_model(grid_pipeline, num_layers, fuse_exchange=fuse)
+    assert model._split_active() is not None
+    got = _counts(grid_pipeline, model, train=True)
+    assert got["all_to_all"] == expected_boundary_collectives(
+        num_layers, model.pipe.fused), (num_layers, fuse, got)
+
+
+def test_overlap_single_layer_forward_only(grid_pipeline):
+    """L=1 eval under the split: exactly one forward collective."""
+    model = _overlap_model(grid_pipeline, 1, fuse_exchange=True)
+    got = _counts(grid_pipeline, model, train=False)
+    assert got["all_to_all"] == 1, got
+
+
 def test_count_primitives_sees_through_jit():
     """The counter recurses into pjit/closed-call sub-jaxprs."""
     import jax

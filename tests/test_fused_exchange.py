@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, st
 
 jax.config.update("jax_enable_x64", True)
 
@@ -162,4 +163,46 @@ def test_pack_unpack_roundtrip():
     packed = pack_payloads(payloads)
     assert packed.shape == (2, P, 5, sum(widths))
     for orig, back in zip(payloads, unpack_payloads(packed, widths)):
+        assert jnp.array_equal(orig, back)
+
+
+def test_pack_unpack_zero_width_payloads():
+    """Zero-width entries (a layer with nothing to send — e.g. the L=1
+    backward, or a degenerate no-boundary partition pre-masking) must pack
+    to zero columns at a stable offset and unpack back to empty arrays,
+    not crash or shift their neighbours."""
+    key = jax.random.PRNGKey(1)
+    widths = (0, 5, 0, 3, 0)
+    payloads = [jax.random.normal(jax.random.fold_in(key, i), (P, 4, w))
+                for i, w in enumerate(widths)]
+    assert pack_widths(payloads) == widths
+    assert pack_offsets(widths) == (0, 0, 5, 5, 8)
+    packed = pack_payloads(payloads)
+    assert packed.shape == (P, 4, 8)
+    back = unpack_payloads(packed, widths)
+    for orig, got in zip(payloads, back):
+        assert got.shape == orig.shape
+        assert jnp.array_equal(orig, got)
+    # all-empty: the degenerate fused send carries zero columns
+    empty = [jnp.zeros((P, 4, 0)) for _ in range(3)]
+    packed = pack_payloads(empty)
+    assert packed.shape == (P, 4, 0)
+    assert all(b.shape == (P, 4, 0)
+               for b in unpack_payloads(packed, (0, 0, 0)))
+
+
+@given(widths=st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                       max_size=6),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_pack_unpack_roundtrip_property(widths, seed):
+    """Property: for ANY width profile (zero-width entries included),
+    unpack(pack(x)) == x exactly and the offsets are the prefix sums."""
+    key = jax.random.PRNGKey(seed)
+    payloads = [jax.random.normal(jax.random.fold_in(key, i), (P, 3, w))
+                for i, w in enumerate(widths)]
+    offs = pack_offsets(tuple(widths))
+    assert offs == tuple(int(sum(widths[:i])) for i in range(len(widths)))
+    packed = pack_payloads(payloads)
+    assert packed.shape == (P, 3, sum(widths))
+    for orig, back in zip(payloads, unpack_payloads(packed, tuple(widths))):
         assert jnp.array_equal(orig, back)

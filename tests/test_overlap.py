@@ -1,0 +1,255 @@
+"""Split-phase overlap schedule vs the unsplit reference, sim backend.
+
+The split re-slices each layer's tile stream into a boundary phase (the
+halo-clustered tail, run before the exchange is issued) and an interior
+phase (computed while the collective is in flight). It is pure
+re-ordering — same tiles, same arithmetic — so this tier-1 matrix pins
+1e-12 float64 parity for loss, gradients, logits and pipeline buffers
+across variants × engines × matmul orders × pipeline knobs on the
+grid-tiny lattice (the only low-boundary regime where the split is
+feasible). Schedule-shape tests trace the step to a jaxpr and assert the
+exact (pallas_call | all_to_all) event sequence; degenerate-graph tests
+pin the fallback to the unsplit schedule. The cross-backend (shard_map)
+parity cells live in the slow-tier subprocess matrix in
+test_pipegcn_spmd.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import (PipeGCN, shard_data, split_spec_from,
+                                topology_from)
+from repro.core.trace_utils import (check_split_schedule,
+                                    expected_split_events,
+                                    traced_step_events)
+from repro.data.graph_pipeline import GraphDataPipeline
+from repro.graph import build_partitioned_graph, make_dataset, partition_graph
+from repro.graph.csr import mean_normalized, sym_normalized
+from repro.launch.mesh import make_partition_mesh
+
+P = 4
+
+
+def _setup(kind):
+    ds = make_dataset("grid-tiny")
+    prop = (mean_normalized(ds.graph) if kind == "sage"
+            else sym_normalized(ds.graph))
+    part = partition_graph(ds.graph, P, seed=0)
+    pg = build_partitioned_graph(prop, part, P, layout="rcm")
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+    sp = split_spec_from(pg)
+    assert sp is not None, "grid-tiny/rcm must admit a feasible split"
+    return ds, topo, data, sp
+
+
+@pytest.fixture(scope="module")
+def sage_setup():
+    return _setup("sage")
+
+
+@pytest.fixture(scope="module")
+def gcn_setup():
+    return _setup("gcn")
+
+
+def _models(setup, kind, variant, agg, order, pipe_kw, dropout,
+            num_layers=3):
+    ds, topo, data, sp = setup
+    mc = ModelConfig(kind=kind, feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=num_layers, num_classes=ds.num_classes,
+                     dropout=dropout, agg=agg, matmul_order=order,
+                     layout="rcm")
+    base = dataclasses.replace(PipeConfig.named(variant, gamma=0.9),
+                               **pipe_kw)
+    ref = PipeGCN(mc, dataclasses.replace(base, overlap="none"), split=sp)
+    spl = PipeGCN(mc, dataclasses.replace(base, overlap="split-phase"),
+                  split=sp)
+    assert ref._split_active() is None and spl._split_active() == sp
+    return ref, spl, topo, data
+
+
+# kind, variant, agg, matmul order, pipe knobs, dropout — every engine,
+# both layer orders + auto, both exchange schedules, compression, k-step
+# staleness, EMA smoothing, training noise
+CELLS = [
+    ("sage", "pipegcn", "coo", "aggregate-first", {}, 0.0),
+    ("sage", "pipegcn", "blocksparse", "aggregate-first", {}, 0.0),
+    ("sage", "pipegcn", "fused", "aggregate-first", {}, 0.0),
+    ("sage", "vanilla", "blocksparse", "aggregate-first", {}, 0.0),
+    ("sage", "vanilla", "coo", "transform-first", {}, 0.0),
+    ("sage", "pipegcn-gf", "blocksparse", "transform-first", {}, 0.0),
+    ("gcn", "pipegcn", "blocksparse", "aggregate-first", {}, 0.0),
+    ("gcn", "vanilla", "fused", "transform-first", {}, 0.0),
+    ("gcn", "pipegcn", "coo", "auto", {}, 0.0),
+    ("sage", "pipegcn", "blocksparse", "auto", {}, 0.5),
+    ("sage", "pipegcn", "blocksparse", "aggregate-first",
+     {"fuse_exchange": False}, 0.0),
+    ("sage", "pipegcn-g", "blocksparse", "aggregate-first",
+     {"compress_boundary": True}, 0.0),
+    ("sage", "pipegcn", "fused", "aggregate-first",
+     {"staleness_steps": 2}, 0.0),
+]
+
+
+@pytest.mark.parametrize("kind,variant,agg,order,pipe_kw,dropout", CELLS)
+def test_split_equals_unsplit(sage_setup, gcn_setup, kind, variant, agg,
+                              order, pipe_kw, dropout):
+    setup = sage_setup if kind == "sage" else gcn_setup
+    ref, spl, topo, data = _models(setup, kind, variant, agg, order,
+                                   pipe_kw, dropout)
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_spl = spl.init_buffers(topo, dtype=jnp.float64)
+    steps = 4 if pipe_kw.get("staleness_steps", 1) > 1 else 3
+    cell = (kind, variant, agg, order, tuple(pipe_kw))
+    for t in range(steps):
+        key = jax.random.PRNGKey(t)
+        l0, g0, b_ref, lg0 = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_spl, lg1 = spl.train_step(topo, params, b_spl, data, key)
+        assert abs(float(l0) - float(l1)) < 1e-12, (cell, t)
+        assert float(jnp.abs(lg0 - lg1).max()) < 1e-12, (cell, t)
+        for k in g0:
+            d = float(jnp.abs(g0[k] - g1[k]).max())
+            assert d < 1e-12, (cell, t, k, d)
+        for a, b in zip(jax.tree.leaves(b_ref), jax.tree.leaves(b_spl)):
+            assert a.dtype == b.dtype, (cell, t)
+            d = float(jnp.abs(a.astype(jnp.float64)
+                              - b.astype(jnp.float64)).max())
+            assert d < 1e-12, (cell, t, d)
+    # eval forward (runs the split under a vanilla PipeConfig internally)
+    le0, lo0 = ref.forward(topo, params, data)
+    le1, lo1 = spl.forward(topo, params, data)
+    assert abs(float(le0) - float(le1)) < 1e-12, cell
+    assert float(jnp.abs(lo0 - lo1).max()) < 1e-12, cell
+
+
+def test_expected_split_events_math():
+    """Hand-computed event sequences (P = phase pallas_call, A = boundary
+    collective). Fused: forward sends are deferred and flushed after the
+    layer-(L-2) boundary phase (L=1: pre-loop); backward flushes after
+    the layer-1 transpose boundary phase. Per-layer: layer 0's features
+    exchange before the loop, each non-final layer's send mid-layer, each
+    backward layer ell>=1 mid-layer."""
+    P_, A = "pallas_call", "all_to_all"
+    assert expected_split_events(1, fused=True) == [A, P_, P_]
+    assert expected_split_events(1, fused=False) == [A, P_, P_]
+    assert expected_split_events(2, fused=True) == [
+        P_, A, P_, P_, P_,            # fwd: flush after layer-0 boundary
+        P_, A, P_]                    # bwd: layer 1, flush mid-layer
+    assert expected_split_events(2, fused=False) == [
+        A, P_, A, P_, P_, P_,         # fwd: pre-loop + layer-0 send
+        P_, A, P_]                    # bwd: layer 1
+    assert expected_split_events(3, fused=True) == [
+        P_, P_, P_, A, P_, P_, P_,    # fwd: flush after layer-1 boundary
+        P_, P_, P_, A, P_]            # bwd: 2 then 1 (flush at ell=1)
+    assert expected_split_events(3, fused=False) == [
+        A, P_, A, P_, P_, A, P_, P_, P_,
+        P_, A, P_, P_, A, P_]
+    assert expected_split_events(3, fused=True, train=False) == [
+        P_, P_, P_, A, P_, P_, P_]
+    # every fused schedule issues >=1 collective strictly between two
+    # phase kernels (the overlap the tentpole exists for)
+    for L in (1, 2, 3, 4):
+        ev = expected_split_events(L, fused=True)
+        ia = ev.index(A)
+        assert 0 < ia < len(ev) - 1 or L == 1
+
+
+@pytest.mark.parametrize("num_layers", [1, 2, 3])
+@pytest.mark.parametrize("fuse", [True, False])
+def test_sim_phase_kernel_sequence(sage_setup, num_layers, fuse):
+    """Sim backend: the exchange is a transpose (no collective primitive),
+    so the traced schedule check reduces to the phase-kernel sequence —
+    two pallas_calls per layer forward, two per backward layer >= 1."""
+    ref, spl, topo, data = _models(sage_setup, "sage", "pipegcn",
+                                   "blocksparse", "aggregate-first",
+                                   {"fuse_exchange": fuse}, 0.0,
+                                   num_layers=num_layers)
+    params = spl.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    buffers = spl.init_buffers(topo, dtype=jnp.float64)
+    ev = traced_step_events(spl.train_step, topo, params, buffers, data,
+                            jax.random.PRNGKey(0))
+    expected = [e for e in expected_split_events(num_layers, fuse)
+                if e == "pallas_call"]
+    assert ev == expected, (num_layers, fuse, ev)
+
+
+@pytest.mark.parametrize("num_layers,fuse", [(1, True), (2, True),
+                                             (2, False)])
+def test_spmd_collective_between_phases(sage_setup, num_layers, fuse):
+    """SPMD backend on a 1-device mesh hosting all P partitions: the
+    jaxpr contains every all_to_all the multi-device program would issue,
+    and check_split_schedule asserts the full event sequence — each
+    boundary collective between the boundary- and interior-phase
+    pallas_calls, forward AND backward. L=1 is the edge cell: no backward
+    exchange, the single forward collective issued before the loop."""
+    ds, topo, data, sp = sage_setup
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=num_layers, num_classes=ds.num_classes,
+                     dropout=0.0, agg="blocksparse",
+                     matmul_order="aggregate-first", layout="rcm")
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"),
+                             fuse_exchange=fuse, overlap="split-phase")
+    model = PipeGCN(mc, pc, split=sp)
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    ev = check_split_schedule(model, mesh, topo, data)
+    assert ev == expected_split_events(num_layers, model.pipe.fused)
+
+
+def test_auto_overlap_engine_gating(sage_setup):
+    """overlap="auto": split iff the engine consumes tile streams. The
+    COO engine implements the phased interface (for parity gating) but
+    has no tile phases to overlap, so auto leaves it unsplit."""
+    ds, topo, data, sp = sage_setup
+    for agg, want_split in (("coo", False), ("blocksparse", True),
+                            ("fused", True)):
+        mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                         num_layers=2, num_classes=ds.num_classes,
+                         dropout=0.0, agg=agg, layout="rcm")
+        model = PipeGCN(mc, dataclasses.replace(PipeConfig.named("pipegcn"),
+                                                overlap="auto"), split=sp)
+        assert (model._split_active() is not None) == want_split, agg
+
+
+@pytest.mark.parametrize("dataset,parts,layout", [
+    ("grid-tiny", 1, "rcm"),       # P=1: no peers, nothing to exchange
+    ("grid-tiny", 4, "natural"),   # no halo clustering -> no contiguous tail
+    ("tiny", 4, "rcm"),            # power-law: ~all nodes are boundary
+])
+def test_degenerate_graphs_fall_back_unsplit(dataset, parts, layout):
+    """No feasible split -> split_spec() is None and a forced
+    overlap="split-phase" model runs the UNSPLIT schedule (identical
+    trace, no zero-size boundary pallas_call, no zero-width collective)
+    rather than degenerating."""
+    pipeline = GraphDataPipeline.build(dataset, parts, kind="sage",
+                                       agg="blocksparse", layout=layout)
+    assert pipeline.split_spec() is None
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=16, num_layers=2,
+                     num_classes=pipeline.dataset.num_classes,
+                     dropout=0.0, agg="blocksparse", layout=layout)
+    forced = PipeGCN(mc, dataclasses.replace(
+        PipeConfig.named("pipegcn"), overlap="split-phase"), split=None)
+    ref = PipeGCN(mc, dataclasses.replace(
+        PipeConfig.named("pipegcn"), overlap="none"), split=None)
+    assert forced._split_active() is None
+    params = ref.init_params(jax.random.PRNGKey(0))
+    bufs = ref.init_buffers(pipeline.topo)
+    l0, g0, _, _ = ref.train_step(pipeline.topo, params, bufs,
+                                  pipeline.train_data, jax.random.PRNGKey(1))
+    l1, g1, _, _ = forced.train_step(pipeline.topo, params, bufs,
+                                     pipeline.train_data,
+                                     jax.random.PRNGKey(1))
+    assert float(l0) == float(l1)
+    for k in g0:
+        assert float(jnp.abs(g0[k] - g1[k]).max()) == 0.0, k

@@ -29,6 +29,14 @@ shards against the natural-layout sim reference (all variants × engines ×
 n_local): node reordering must be numerically invisible, so loss / weight
 grads / UNPACKED logits stay 1e-12 while the pipeline buffers (which live
 in permuted coordinates and are intentionally not compared) differ.
+
+The OVERLAP matrix runs the split-phase schedule (SPMD, rcm grid-tiny
+lattice — the low-boundary regime where the split is feasible) against
+the UNSPLIT sim reference on the same layout: the split re-slices each
+layer's aggregation into boundary-phase → exchange → interior-phase, so
+this is a cross-backend AND cross-schedule 1e-12 exactness check over
+the full variants × engines × n_local product plus the wire/schedule
+knob cells.
 """
 import os
 import subprocess
@@ -99,6 +107,23 @@ LAYOUT = [(v, a, nl, {"layout": "rcm"}, "1d")
     ("pipegcn", "coo", 2, {"layout": "rcm", "compress_boundary": True}, "1d"),
     ("pipegcn", "fused", 2, {"layout": "rcm", "staleness_steps": 2}, "1d"),
     ("pipegcn", "blocksparse", 2, {"layout": "rcm"}, "2d"),
+]
+
+# Split-phase overlap cells: SPMD split model vs unsplit sim reference,
+# both on the rcm grid-tiny lattice (P=8: fwd_bnd=13/17 tiles). The full
+# variant × engine × n_local product, plus knob cells (blocking per-layer
+# exchange, bf16 compression, k-step staleness, matmul orders, 2-D axes).
+OVERLAP = [(v, a, nl, {}, "1d")
+           for v in ("vanilla", "pipegcn", "pipegcn-gf")
+           for a in ("coo", "blocksparse", "fused")
+           for nl in (1, 2, 4)] + [
+    ("pipegcn", "blocksparse", 2, {"fuse_exchange": False}, "1d"),
+    ("pipegcn", "blocksparse", 2, {"compress_boundary": True}, "1d"),
+    ("pipegcn", "fused", 2, {"staleness_steps": 2}, "1d"),
+    ("pipegcn-g", "blocksparse", 4, {"fuse_exchange": True}, "1d"),
+    ("pipegcn", "fused", 2, {"matmul_order": "transform-first"}, "1d"),
+    ("vanilla", "blocksparse", 2, {"matmul_order": "auto"}, "1d"),
+    ("pipegcn", "blocksparse", 2, {}, "2d"),
 ]
 
 SCRIPT = textwrap.dedent("""
@@ -199,17 +224,109 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.slow
-def test_spmd_matrix_equals_sim_subprocess():
+SCRIPT_OVERLAP = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, numpy as np
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.graph import make_dataset, partition_graph, build_partitioned_graph
+    from repro.graph.csr import mean_normalized
+    from repro.core.config import ModelConfig, PipeConfig
+    from repro.core.pipegcn import (PipeGCN, topology_from, shard_data,
+                                    split_spec_from)
+    from repro.launch.mesh import make_mesh, make_partition_mesh
+
+    P = 8
+    ds = make_dataset("grid-tiny")
+    prop = mean_normalized(ds.graph)
+    part = partition_graph(ds.graph, P, seed=0)
+    pg = build_partitioned_graph(prop, part, P, layout="rcm")
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+    sp = split_spec_from(pg)
+    assert sp is not None, "grid-tiny/rcm/P=8 must admit a feasible split"
+
+    def run(variant, agg, n_local, pipe_kw, axis_spec, steps=3):
+        pipe_kw = dict(pipe_kw)
+        mo = pipe_kw.pop("matmul_order", "aggregate-first")
+        mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                         num_layers=2, num_classes=ds.num_classes,
+                         dropout=0.0, agg=agg, matmul_order=mo,
+                         layout="rcm")
+        pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.9),
+                                 **pipe_kw)
+        # sim reference: UNSPLIT blocking per-layer schedule, same layout
+        # (buffers stay directly comparable); fused cells reference COO so
+        # they double as cross-engine exactness checks under the split.
+        ref_mc = dataclasses.replace(mc, agg="coo") if agg == "fused" else mc
+        ref = PipeGCN(ref_mc, dataclasses.replace(
+            pc, fuse_exchange=False, overlap="none"))
+        model = PipeGCN(mc, dataclasses.replace(pc, overlap="split-phase"),
+                        split=sp)
+        assert model._split_active() == sp
+        params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+        b_sim = model.init_buffers(topo, dtype=jnp.float64)
+        b_spmd = model.init_buffers(topo, dtype=jnp.float64)
+        n_dev = P // n_local
+        if axis_spec == "2d":
+            mesh = make_mesh((2, n_dev // 2), ("a", "b"),
+                             devices=jax.devices()[:n_dev])
+            axis = ("a", "b")
+        else:
+            mesh = make_partition_mesh(P, parts_per_device=n_local)
+            axis = "parts"
+        step = model.make_spmd_step(mesh, topo, axis)
+        cell = (variant, agg, f"nl{n_local}", axis_spec, pipe_kw)
+        for t in range(steps):
+            key = jax.random.PRNGKey(t)
+            l1, g1, b_sim, lg1 = ref.train_step(topo, params, b_sim, data,
+                                                key)
+            l2, lg2, g2, b_spmd = step(topo, params, b_spmd, data, key)
+            assert abs(float(l1) - float(l2)) < 1e-12, ("loss", cell, t)
+            for k in g1:
+                d = float(jnp.abs(g1[k] - jnp.asarray(g2[k])).max())
+                assert d < 1e-12, ("grad", cell, t, k, d)
+            d = float(jnp.abs(lg1 - jnp.asarray(lg2)).max())
+            assert d < 1e-12, ("logits", cell, t, d)
+            for a, b in zip(jax.tree.leaves(b_sim), jax.tree.leaves(b_spmd)):
+                d = float(jnp.abs(a - jnp.asarray(b)).max())
+                assert d < 1e-12, ("buffers", cell, t, d)
+        print(f"OK split/{variant}/{agg}/{mo}/nl{n_local}/{axis_spec}/"
+              f"{pipe_kw}", flush=True)
+
+    import json, sys
+    cells = json.loads(sys.argv[1])
+    for variant, agg, n_local, pipe_kw, axis_spec in cells:
+        run(variant, agg, n_local, pipe_kw, axis_spec,
+            steps=4 if pipe_kw.get("staleness_steps", 1) > 1 else 3)
+    print("ALL-OK")
+""")
+
+
+def _run_matrix(script, cells, timeout):
     import json
-    cells = MATRIX + EXTRA + LAYOUT
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)
-    # ~250 s locally for the full matrix; generous headroom for slower CI.
-    proc = subprocess.run([sys.executable, "-c", SCRIPT, json.dumps(cells)],
+    proc = subprocess.run([sys.executable, "-c", script, json.dumps(cells)],
                           env=env, capture_output=True, text=True,
-                          timeout=1800)
+                          timeout=timeout)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ALL-OK" in proc.stdout
     assert proc.stdout.count("OK ") == len(cells), proc.stdout
+
+
+@pytest.mark.slow
+def test_spmd_matrix_equals_sim_subprocess():
+    # ~250 s locally for the full matrix; generous headroom for slower CI.
+    _run_matrix(SCRIPT, MATRIX + EXTRA + LAYOUT, timeout=1800)
+
+
+@pytest.mark.slow
+def test_spmd_overlap_matrix_equals_unsplit_sim_subprocess():
+    _run_matrix(SCRIPT_OVERLAP, OVERLAP, timeout=1800)
