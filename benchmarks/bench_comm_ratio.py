@@ -72,6 +72,47 @@ def run_collective_counts(quick: bool = False):
     return counts_meta
 
 
+def run_wire_sweep(quick: bool = False):
+    """ISSUE 8 acceptance gate: traced bytes-on-wire per wire format.
+
+    Traces the fused-exchange training step on reddit-sim (P=4, template
+    model) and sums the all_to_all operand bytes — shape/dtype static, so
+    the figure is exact and machine-independent. Gates the quantized
+    codecs' traffic: bf16 exactly 0.5x f32, int8 <= 0.27x, int4 <= 0.15x
+    (the slack over the ideal 1/4 and 1/8 is the per-128-column f32 scale
+    region, see docs/wire-format.md).
+    """
+    from repro.core.pipegcn import PipeGCN
+    from repro.core.trace_utils import traced_step_wire_bytes
+    from repro.launch.mesh import make_partition_mesh
+
+    P = 4
+    pipeline = GraphDataPipeline.build("reddit-sim", P, kind="sage")
+    tpl = model_template("reddit-sim")
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=tpl["hidden"], num_layers=tpl["num_layers"],
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    got = {}
+    for wire in ("f32", "bf16", "int8", "int4"):
+        pc = dataclasses.replace(PipeConfig.named("pipegcn"),
+                                 fuse_exchange=True, wire=wire)
+        model = PipeGCN(mc, pc)
+        got[wire] = traced_step_wire_bytes(model, mesh, pipeline.topo,
+                                           pipeline.train_data, train=True)
+        # us_per_call is 0: this is a byte count, not a timing — the
+        # trajectory record pins coverage, the meta pins the exact bytes
+        emit(f"table2/wire_bytes/{wire}", 0.0,
+             f"bytes={got[wire]} ratio={got[wire] / got['f32']:.4f}")
+    assert got["bf16"] * 2 == got["f32"], got
+    assert got["int8"] <= 0.27 * got["f32"], got
+    assert got["int4"] <= 0.15 * got["f32"], got
+    emit_meta("wire_bytes", {
+        w: {"bytes": int(b), "pct_of_f32": int(round(100.0 * b / got["f32"]))}
+        for w, b in got.items()})
+    return got
+
+
 def run(quick: bool = False):
     cases = CASES[:2] if quick else CASES
     rows = []
@@ -94,6 +135,7 @@ def run(quick: bool = False):
         assert all(b >= a - 0.02 for (_, a), (_, b) in zip(xs, xs[1:])), (
             name, xs)
     run_collective_counts(quick=quick)
+    run_wire_sweep(quick=quick)
     return rows
 
 

@@ -21,4 +21,8 @@ rm -f /tmp/jax_import_err.$$
 # every boundary collective between the phase kernels, on both backends.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.check_schedule
 
+# Preflight: public-API docstrings + README/docs cross-links (stdlib-only;
+# the CI docs job additionally runs the pinned ruff's pydocstyle subset).
+python scripts/check_docs.py
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"

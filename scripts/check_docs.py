@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Docs gate: public-API docstring presence + markdown cross-link checker.
+
+Two stdlib-only checks (runnable in any environment, no ruff/jax needed —
+CI additionally runs the pinned ruff's pydocstyle subset on the same
+files):
+
+1. every public module and public top-level class under the PUBLIC
+   prefixes of src/repro has a docstring (the same surface the CI docs
+   job gates with ruff --select D100,D101,D419; names with a leading
+   underscore are exempt);
+2. every relative markdown link in README.md and docs/*.md resolves — the
+   target file exists, and an ``#anchor`` fragment matches a heading slug
+   in the target (GitHub's slug rules: lowercase, punctuation stripped,
+   spaces to hyphens).
+
+Exit status is the number of problems; each is printed as file:line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Prefixes whose top-level API is documentation-gated. kernels/ and the
+# LM-architecture pool carry their own inline conventions and are covered
+# by review, not this gate.
+PUBLIC_PREFIXES = (
+    "src/repro/core",
+    "src/repro/data",
+    "src/repro/analysis",
+    "src/repro/graph",
+    "src/repro/launch",
+    "src/repro/optim",
+    "src/repro/models",
+)
+
+MARKDOWN = ["README.md", "docs/architecture.md", "docs/wire-format.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
+
+
+def check_docstrings() -> list[str]:
+    problems = []
+    for prefix in PUBLIC_PREFIXES:
+        base = os.path.join(ROOT, prefix)
+        for dirpath, _, files in os.walk(base):
+            for fn in sorted(files):
+                if not fn.endswith(".py") or fn.startswith("_"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, ROOT)
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=rel)
+                if not ast.get_docstring(tree):
+                    problems.append(f"{rel}:1 missing module docstring")
+                for node in tree.body:
+                    if not isinstance(node, ast.ClassDef):
+                        continue
+                    if node.name.startswith("_"):
+                        continue
+                    ds = ast.get_docstring(node)
+                    if not (ds and ds.strip()):
+                        problems.append(f"{rel}:{node.lineno} public class "
+                                        f"{node.name!r} missing docstring")
+    return problems
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of one heading line."""
+    # drop inline code/link markup, then non-word punctuation
+    h = re.sub(r"[`*]", "", heading)
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(md_path: str) -> set[str]:
+    with open(md_path) as f:
+        text = f.read()
+    # strip fenced code blocks — '# comment' lines inside are not headings
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return {_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_links() -> list[str]:
+    problems = []
+    for md in MARKDOWN:
+        src = os.path.join(ROOT, md)
+        if not os.path.exists(src):
+            problems.append(f"{md}:1 file listed in check_docs.MARKDOWN "
+                            "does not exist")
+            continue
+        with open(src) as f:
+            lines = f.read().splitlines()
+        in_fence = False
+        for ln, line in enumerate(lines, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue  # offline container: external URLs unchecked
+                path, _, frag = target.partition("#")
+                if path:
+                    dest = os.path.normpath(
+                        os.path.join(os.path.dirname(src), path))
+                else:
+                    dest = src
+                if not os.path.exists(dest):
+                    problems.append(f"{md}:{ln} broken link {target!r} "
+                                    f"(no such file {path!r})")
+                    continue
+                if frag and dest.endswith(".md"):
+                    if _slug(frag) not in _anchors(dest):
+                        problems.append(f"{md}:{ln} broken anchor "
+                                        f"{target!r} (no heading slugs to "
+                                        f"#{_slug(frag)})")
+    return problems
+
+
+def main() -> int:
+    problems = check_docstrings() + check_links()
+    for p in problems:
+        print(p)
+    print(f"check_docs: {len(problems)} problem(s)")
+    return min(len(problems), 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

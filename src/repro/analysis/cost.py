@@ -289,9 +289,54 @@ def _nnz_per_layer(nnz_eff, num_layers: int) -> list[float]:
     return [float(nnz_eff)] * num_layers
 
 
+# -- boundary wire pricing (ISSUE 8: quantized + sliced traffic) -------
+
+#: Bytes one boundary-payload row of width f occupies under each wire
+#: format — must match the codec layouts in repro.core.codec (the int8/
+#: int4 figures include the trailing per-block f32 scale region).
+def wire_bytes_per_row(wire: str, f: int, block: int = 128) -> float:
+    """Wire bytes of one f-wide boundary row under `wire` (f32 payload)."""
+    nb = -(-f // block) if f else 0
+    if wire == "f32":
+        return 4.0 * f
+    if wire == "bf16":
+        return 2.0 * f
+    if wire == "int8":
+        return float(f + 4 * nb)
+    if wire == "int4":
+        return float((f + 1) // 2 + 4 * nb)
+    raise ValueError(f"unknown wire format {wire!r}")
+
+
+def choose_wire_formats(widths, candidates=("bf16", "int8"),
+                        block: int = 128) -> tuple[str, ...]:
+    """Per-layer wire format `wire="auto"` resolves to: the candidate with
+    the fewest bytes for each payload width, earliest-listed winning ties.
+
+    The default candidate set deliberately leads with bf16 (byte ties
+    prefer fidelity) and excludes int4 — its accuracy cost is large enough
+    that shipping nibbles stays an explicit per-run decision."""
+    out = []
+    for f in widths:
+        out.append(min(candidates,
+                       key=lambda w: (wire_bytes_per_row(w, int(f), block),
+                                      candidates.index(w))))
+    return tuple(out)
+
+
+#: Comm-to-compute exchange rate for the order/wire co-decision: FLOPs one
+#: wire byte is worth on the paper-normalized GPU (sustained matmul
+#: throughput / link bandwidth — benchmarks.common.PAPER_GPU's
+#: 13.45e12 * 0.22 flops over 4e9 B/s).
+DEFAULT_FLOPS_PER_WIRE_BYTE = 13.45e12 * 0.22 / 4e9
+
+
 def gcn_order_report(layer_dims, num_rows: int, combined: int,
                      nnz_eff, train: bool = True,
-                     fused: bool = False, tile: int = _TILE) -> list[dict]:
+                     fused: bool = False, tile: int = _TILE,
+                     slot_rows: float = 0.0, wire_bytes_fn=None,
+                     slice_boundary: bool = False,
+                     comm_flops_per_byte: float = 0.0) -> list[dict]:
     """Per-layer cost table: {order: GcnLayerCost} + the argmin choice.
 
     `layer_dims` is ``ModelConfig.layer_dims()`` — [(fin, fout)] per layer.
@@ -304,34 +349,55 @@ def gcn_order_report(layer_dims, num_rows: int, combined: int,
     reported for the roofline-minded reader either way). Callers with the
     real kernel tile size in hand pass it through — it prices the fused
     backward's prologue recompute.
-    """
+
+    Boundary-byte pricing (all off by default, so the classic FLOP argmin
+    is unchanged): with `slot_rows` (boundary rows per exchange payload,
+    P·slot per partition) and `comm_flops_per_byte` > 0, each order is
+    charged `comm_flops_per_byte × wire_bytes` in the argmin key, where
+    wire_bytes prices the payload width that order ships — fin, or fout
+    under transform-first when `slice_boundary` and fout <= fin (layer 0
+    always ships fin: its payload is the raw input) — through
+    `wire_bytes_fn(layer, width)` (default: 4 bytes/element), once forward
+    plus once backward for trained layers > 0. The per-order byte figure
+    lands in the report as "wire_bytes" either way."""
     per_layer_nnz = _nnz_per_layer(nnz_eff, len(layer_dims))
+    if wire_bytes_fn is None:
+        wire_bytes_fn = lambda ell, f: 4.0 * f     # noqa: E731
     out = []
     for ell, (fin, fout) in enumerate(layer_dims):
-        costs = {
-            order: gcn_layer_order_cost(
+        costs = {}
+        wire_bytes = {}
+        for order in GCN_ORDERS:
+            costs[order] = gcn_layer_order_cost(
                 order, fin, fout, num_rows, combined, per_layer_nnz[ell],
                 first_layer=(ell == 0), train=train,
                 fused=(fused and order == "aggregate-first"), tile=tile)
-            for order in GCN_ORDERS
-        }
+            width = (fout if (slice_boundary and ell > 0 and fout <= fin
+                              and order == "transform-first") else fin)
+            n_dir = 1 + (1 if train and ell > 0 else 0)
+            wire_bytes[order] = slot_rows * wire_bytes_fn(ell, width) * n_dir
         chosen = min(GCN_ORDERS,
-                     key=lambda o: (costs[o].flops, costs[o].hbm_bytes))
-        out.append({"layer": ell, "costs": costs, "chosen": chosen})
+                     key=lambda o: (costs[o].flops
+                                    + comm_flops_per_byte * wire_bytes[o],
+                                    costs[o].hbm_bytes))
+        out.append({"layer": ell, "costs": costs, "chosen": chosen,
+                    "wire_bytes": wire_bytes})
     return out
 
 
 def choose_gcn_orders(layer_dims, num_rows: int, combined: int,
                       nnz_eff, train: bool = True,
                       fused: bool = False,
-                      tile: int = _TILE) -> tuple[str, ...]:
+                      tile: int = _TILE, **wire_kw) -> tuple[str, ...]:
     """The static per-layer ordering the "auto" matmul_order resolves to.
 
     `nnz_eff` follows `gcn_order_report`: scalar or per-layer measured
-    sparse work (tile count × T² for the tile engines)."""
+    sparse work (tile count × T² for the tile engines); `wire_kw` passes
+    the boundary-byte pricing knobs through (slot_rows / wire_bytes_fn /
+    slice_boundary / comm_flops_per_byte)."""
     return tuple(r["chosen"] for r in gcn_order_report(
         layer_dims, num_rows, combined, nnz_eff, train=train, fused=fused,
-        tile=tile))
+        tile=tile, **wire_kw))
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,252 @@
+"""Pluggable boundary-traffic codecs for the PipeGCN exchange wire.
+
+Every boundary payload (forward features, backward feature-gradients) goes
+through exactly one codec before it touches a backend ``exchange`` /
+``fused_exchange`` and through the matching ``decode`` right after — the
+step math on either side always sees the model dtype. ``PipeConfig.wire``
+selects the codec; the normative byte layouts live in ``docs/wire-format.md``.
+
+Codecs
+------
+``f32``   identity pass-through. The wire array IS the payload (any float
+          dtype — the f64 parity tests ride this path unchanged).
+``bf16``  truncating cast to bfloat16 on the wire, cast back on receive.
+          Exactly the historical ``compress_boundary`` behaviour.
+``int8``  blockwise-scaled symmetric quantization, 1 byte per element plus
+          a per-block f32 scale region (4 bytes per ``block`` columns).
+``int4``  same, two elements packed per byte (low nibble = even column).
+
+Quantized wire layout (per payload row, along the feature axis):
+
+    [ payload bytes | scales region ]
+      int8: F cols    4*ceil(F/block) cols (f32 scales bitcast to uint8)
+      int4: ceil(F/2)
+
+The scales ride INSIDE the wire array as trailing uint8 columns, so the
+exchange itself stays a pure dtype-agnostic permutation of leading axes —
+sim transpose, flat all_to_all, and the hierarchical n_local>1 exchange all
+carry the scales for free, and the packed fused-exchange buffer simply
+grows a scales region per layer slot (``pack_offsets`` over wire widths).
+
+Quantization math (symmetric, zero-preserving): per block of ``block``
+feature columns, ``scale = amax / qmax`` (``qmax`` = 127 for int8, 7 for
+int4; all-zero blocks use scale 1 so zeros round-trip exactly) and
+``q = clip(round(x / scale), -qmax, qmax)``. The reconstruction error is
+bounded by ``scale / 2 = amax / (2*qmax)`` per element. Scales are stored
+as float32 regardless of the payload dtype.
+
+Encoding is deterministic, partition-local, element-wise-independent math,
+so it commutes with the exchange and with the fused feature-axis packing:
+fused and per-layer schedules stay bit-identical under every codec.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: Accepted ``PipeConfig.wire`` values ("auto" resolves per layer via
+#: ``repro.analysis.cost.choose_wire_formats``).
+WIRE_FORMATS = ("f32", "bf16", "int8", "int4")
+
+#: Default feature-block size for the quantized scale vectors (one f32
+#: scale per ``WIRE_BLOCK`` columns; clamped to the payload width).
+WIRE_BLOCK = 128
+
+
+def _nblocks(f: int, block: int) -> int:
+    return -(-f // block) if f else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class NativeCodec:
+    """Identity codec: the payload ships in its own dtype (4 bytes/elem f32)."""
+
+    name: str = "f32"
+
+    def wire_width(self, f: int) -> int:
+        """Feature columns the wire array carries for an f-wide payload."""
+        return f
+
+    def wire_bytes(self, f: int) -> float:
+        """Bytes one f32 payload row of width f occupies on the wire."""
+        return 4.0 * f
+
+    def encode(self, x):
+        """Pass the payload through unchanged."""
+        return x
+
+    def decode(self, wire, f: int, dtype):
+        """Restore the pre-pack dtype (undoes fused-pack dtype promotion)."""
+        return wire.astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec:
+    """Truncating bfloat16 wire cast (the historical ``compress_boundary``)."""
+
+    name: str = "bf16"
+
+    def wire_width(self, f: int) -> int:
+        """Feature columns on the wire (unchanged; the dtype halves bytes)."""
+        return f
+
+    def wire_bytes(self, f: int) -> float:
+        """Bytes one payload row of width f occupies on the wire."""
+        return 2.0 * f
+
+    def encode(self, x):
+        """Cast the payload to bfloat16."""
+        return x.astype(jnp.bfloat16)
+
+    def decode(self, wire, f: int, dtype):
+        """Cast the received wire array back to the model dtype."""
+        return wire.astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCodec:
+    """Blockwise-scaled symmetric int8/int4 quantization (uint8 wire).
+
+    ``bits`` is 8 or 4; ``block`` is the feature-block size each f32 scale
+    covers. See the module docstring for the exact wire layout and error
+    bound; ``docs/wire-format.md`` is the normative spec.
+    """
+
+    bits: int = 8
+    block: int = WIRE_BLOCK
+
+    @property
+    def name(self) -> str:
+        """Wire-format name ("int8" / "int4")."""
+        return f"int{self.bits}"
+
+    @property
+    def qmax(self) -> int:
+        """Largest stored magnitude (127 for int8, 7 for int4)."""
+        return (1 << (self.bits - 1)) - 1
+
+    def payload_cols(self, f: int) -> int:
+        """uint8 columns holding the quantized values themselves."""
+        return f if self.bits == 8 else (f + 1) // 2
+
+    def wire_width(self, f: int) -> int:
+        """uint8 columns on the wire: payload + 4 per scale block."""
+        return self.payload_cols(f) + 4 * _nblocks(f, self.block)
+
+    def wire_bytes(self, f: int) -> float:
+        """Bytes one payload row of width f occupies on the wire."""
+        return float(self.wire_width(f))
+
+    def _scales(self, x, f: int):
+        """Per-block f32 scales of the (..., F) payload (zero blocks -> 1)."""
+        nb = _nblocks(f, self.block)
+        pad = nb * self.block - f
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        xb = xp.reshape(x.shape[:-1] + (nb, self.block))
+        amax = jnp.max(jnp.abs(xb), axis=-1)
+        return jnp.where(amax > 0, amax / self.qmax, 1.0).astype(jnp.float32)
+
+    def encode(self, x):
+        """Quantize (..., F) to the (..., wire_width(F)) uint8 wire array."""
+        f = x.shape[-1]
+        if f == 0:
+            return jnp.zeros(x.shape[:-1] + (0,), jnp.uint8)
+        scale = self._scales(x, f)                          # (..., nb) f32
+        sfull = jnp.repeat(scale, self.block, axis=-1)[..., :f]
+        q = jnp.clip(jnp.round(x / sfull.astype(x.dtype)),
+                     -self.qmax, self.qmax).astype(jnp.int8)
+        if self.bits == 8:
+            payload = jax.lax.bitcast_convert_type(q, jnp.uint8)
+        else:
+            if f % 2:
+                q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+            u = jax.lax.bitcast_convert_type(q, jnp.uint8)
+            lo = u[..., 0::2] & 0xF
+            hi = u[..., 1::2] & 0xF
+            payload = lo | (hi << 4).astype(jnp.uint8)
+        sbytes = jax.lax.bitcast_convert_type(scale, jnp.uint8)
+        sbytes = sbytes.reshape(scale.shape[:-1] + (scale.shape[-1] * 4,))
+        return jnp.concatenate([payload, sbytes], axis=-1)
+
+    def decode(self, wire, f: int, dtype):
+        """Dequantize the uint8 wire array back to a (..., F) ``dtype`` array."""
+        if f == 0:
+            return jnp.zeros(wire.shape[:-1] + (0,), dtype)
+        nb = _nblocks(f, self.block)
+        pc = self.payload_cols(f)
+        payload, sbytes = wire[..., :pc], wire[..., pc:]
+        scale = jax.lax.bitcast_convert_type(
+            sbytes.reshape(sbytes.shape[:-1] + (nb, 4)), jnp.float32)
+        if self.bits == 8:
+            q = jax.lax.bitcast_convert_type(payload, jnp.int8)
+            q = q.astype(jnp.int32)
+        else:
+            lo = (payload & 0xF).astype(jnp.int32)
+            hi = ((payload >> 4) & 0xF).astype(jnp.int32)
+            q = jnp.stack([lo, hi], axis=-1).reshape(
+                payload.shape[:-1] + (2 * pc,))[..., :f]
+            q = jnp.where(q >= 8, q - 16, q)
+        sfull = jnp.repeat(scale, self.block, axis=-1)[..., :f]
+        return (q.astype(dtype) * sfull.astype(dtype))
+
+
+def make_codec(wire: str, block: int = WIRE_BLOCK):
+    """The codec instance for one resolved wire-format name."""
+    if wire == "f32":
+        return NativeCodec()
+    if wire == "bf16":
+        return Bf16Codec()
+    if wire == "int8":
+        return QuantCodec(bits=8, block=block)
+    if wire == "int4":
+        return QuantCodec(bits=4, block=block)
+    raise ValueError(f"unknown wire format {wire!r}; have {WIRE_FORMATS}")
+
+
+# ----------------------------------------------------------------------
+# Byte planarization for the packed fused-exchange buffer.
+#
+# A fused pack concatenates per-layer wire arrays along the feature axis.
+# All-float plans keep the historical concat (dtype promotion is undone by
+# each codec's decode, bit-identically); a plan that mixes quantized uint8
+# wires with float wires would let the concat promote the raw bytes to
+# floats — values survive, but every byte would ship 4-wide. These helpers
+# bitcast float wires to uint8 columns instead, so a mixed "auto" plan
+# still packs into one dense byte buffer.
+# ----------------------------------------------------------------------
+
+def byteify(wire):
+    """(..., F) wire array -> ((..., F*itemsize) uint8, itemsize, dtype)."""
+    if wire.dtype == jnp.uint8:
+        return wire, 1, wire.dtype
+    it = wire.dtype.itemsize
+    b = jax.lax.bitcast_convert_type(wire, jnp.uint8)   # (..., F, itemsize)
+    return b.reshape(wire.shape[:-1] + (wire.shape[-1] * it,)), it, wire.dtype
+
+
+def unbyteify(bytes_arr, itemsize: int, dtype):
+    """Inverse of ``byteify`` given the static (itemsize, dtype) record."""
+    if itemsize == 1:
+        return bytes_arr
+    f = bytes_arr.shape[-1] // itemsize
+    return jax.lax.bitcast_convert_type(
+        bytes_arr.reshape(bytes_arr.shape[:-1] + (f, itemsize)), dtype)
+
+
+def fused_exchange_encoded(backend, wires):
+    """``backend.fused_exchange`` over already-encoded per-layer wires.
+
+    Byte-planarizes exactly when the pack mixes quantized (uint8) and
+    float wires; homogeneous plans (and legacy all-float mixed-precision
+    packs) take the historical concat path unchanged, keeping the fused
+    schedule bit-identical to the per-layer schedule under every codec.
+    """
+    dtypes = {w.dtype for w in wires}
+    if len(dtypes) > 1 and any(d == jnp.dtype(jnp.uint8) for d in dtypes):
+        planar = [byteify(w) for w in wires]
+        recvs = backend.fused_exchange([b for b, _, _ in planar])
+        return [unbyteify(r, it, dt)
+                for r, (_, it, dt) in zip(recvs, planar)]
+    return backend.fused_exchange(list(wires))

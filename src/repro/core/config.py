@@ -73,9 +73,30 @@ class PipeConfig:
     smooth_feat: bool = False
     smooth_grad: bool = False
     gamma: float = 0.95            # paper default decay rate
-    # Beyond-paper (App. C direction): compress boundary payloads to bf16
-    # on the wire; accumulation stays f32. Halves the collective bytes.
+    # DEPRECATED alias for wire="bf16" (the original App. C bf16 switch).
+    # Setting it normalizes `wire` below; new code should set `wire`.
     compress_boundary: bool = False
+    # Boundary wire format (repro.core.codec): what every exchanged
+    # feature/gradient payload is encoded to on the wire. "f32" (default)
+    # ships the native dtype; "bf16" halves the bytes (the old
+    # compress_boundary); "int8"/"int4" are blockwise-scaled quantization
+    # (~4x/~8x smaller, per-`wire_block` f32 scales ride in the payload);
+    # "auto" picks per layer via the cost model's byte pricing
+    # (repro.analysis.cost.choose_wire_formats — int4 stays explicit-only).
+    wire: str = "f32"
+    # Feature-block size of the quantized scale vectors: one f32 scale per
+    # `wire_block` feature columns (per boundary row). Only int8/int4 use it.
+    wire_block: int = 128
+    # Feature-dimension slicing ("Slicing Input Features...", arXiv
+    # 2408.11500): layers the cost model runs transform-first ship the
+    # post-transform width F_out <= F_in — the consumer aggregates the
+    # already-transformed halo rows. Exact for vanilla/eval; under
+    # staleness the halo transform uses last step's weights (same
+    # one-iteration-stale contract as the features themselves). Layer 0
+    # always ships raw input features; incompatible with overlap=
+    # "split-phase" (slicing moves the send after the transform, so the
+    # boundary-first phase split has nothing to overlap).
+    slice_boundary: bool = False
     # Beyond-paper (App. C "increase the pipeline depth" future work):
     # consume boundary data from k iterations ago — k-1 extra iterations of
     # compute available to hide one exchange. k=1 is the paper's PipeGCN.
@@ -103,11 +124,29 @@ class PipeConfig:
     overlap: str = "auto"
 
     OVERLAPS = ("auto", "none", "split-phase")
+    WIRES = ("f32", "bf16", "int8", "int4", "auto")
 
     def __post_init__(self):
         if self.overlap not in self.OVERLAPS:
             raise ValueError(
                 f"unknown overlap {self.overlap!r}; have {self.OVERLAPS}")
+        if self.wire not in self.WIRES:
+            raise ValueError(
+                f"unknown wire {self.wire!r}; have {self.WIRES}")
+        if self.wire_block < 1:
+            raise ValueError(f"wire_block must be >= 1, got {self.wire_block}")
+        if self.compress_boundary:
+            if self.wire == "f32":
+                object.__setattr__(self, "wire", "bf16")
+            elif self.wire != "bf16":
+                raise ValueError(
+                    "compress_boundary is a deprecated alias for wire='bf16' "
+                    f"and conflicts with wire={self.wire!r}")
+        if self.slice_boundary and self.overlap == "split-phase":
+            raise ValueError(
+                "slice_boundary is incompatible with overlap='split-phase' "
+                "(the sliced send happens after the transform, leaving no "
+                "boundary-first phase to overlap); use overlap='auto'/'none'")
 
     @property
     def fused(self) -> bool:

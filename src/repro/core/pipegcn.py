@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codec import fused_exchange_encoded, make_codec
 from repro.core.config import ModelConfig, PipeConfig
 from repro.graph.halo import PartitionedGraph, extract_partition_tiles
 from repro.kernels.aggregate import get_engine
@@ -468,15 +469,20 @@ class PipeGCN:
         """Zero pipeline state (Alg. 1 line 6: boundary features start at 0).
 
         With staleness_steps k>1, each buffer is a FIFO queue along a new
-        leading axis of size k (slot 0 = oldest = consumed)."""
+        leading axis of size k (slot 0 = oldest = consumed).
+
+        Buffer widths follow `payload_widths`: the layer input width fin,
+        except for sliced layers (`PipeConfig.slice_boundary`), whose
+        exchange — and therefore whose stale state — carries the
+        post-transform width fout."""
         p = topo.num_parts
         k = self.pipe.staleness_steps
         q = (k,) if k > 1 else ()
         lead = q + ((p,) if leading else ())
         feat, grad = [], []
-        for fin, _ in self.model.layer_dims():
-            feat.append(jnp.zeros(lead + (topo.halo_size, fin), dtype))
-            grad.append(jnp.zeros(lead + (topo.max_inner, fin), dtype))
+        for w in self.payload_widths(topo):
+            feat.append(jnp.zeros(lead + (topo.halo_size, w), dtype))
+            grad.append(jnp.zeros(lead + (topo.max_inner, w), dtype))
         return {"feat": tuple(feat), "grad": tuple(grad)}
 
     # ---------------- pipeline-buffer semantics ----------------
@@ -523,8 +529,13 @@ class PipeGCN:
         an engine that consumes tile streams (the split only repositions
         collectives around the tile phases; for COO it is a pure masking
         overhead, kept reachable via the explicit "split-phase" for the
-        cross-engine parity tests)."""
-        if self.pipe.overlap == "none" or self.split is None:
+        cross-engine parity tests). Feature slicing always disables the
+        split: the sliced send only exists after the dense transform, so
+        there is no boundary-first phase to overlap (the explicit
+        "split-phase" + slice_boundary combination is already rejected by
+        PipeConfig)."""
+        if (self.pipe.overlap == "none" or self.split is None
+                or self.pipe.slice_boundary):
             return None
         if self.pipe.overlap == "split-phase":
             return self.split
@@ -532,6 +543,65 @@ class PipeGCN:
         return self.split if self.engine.name in TILE_ENGINES else None
 
     def layer_orders(self, topo: Topology, train: bool = True,
+                     fused: bool | None = None) -> tuple[str, ...]:
+        """Per-layer matmul ordering the step actually runs with.
+
+        `_base_orders` resolves the ModelConfig knob ("auto" via the static
+        cost model, with wire-byte pricing folded in when slice_boundary is
+        on); on top of that, every SLICED layer is forced to
+        "transform-first" in every mode — the sliced exchange and its stale
+        buffers carry the post-transform width, so the order backing them
+        must not drift between train/eval or across `fused` overrides
+        (buffer shapes are part of the step signature)."""
+        orders = self._base_orders(topo, train=train, fused=fused)
+        sl = self.sliced_layers(topo)
+        if not sl:
+            return orders
+        return tuple("transform-first" if ell in sl else o
+                     for ell, o in enumerate(orders))
+
+    def sliced_layers(self, topo: Topology) -> frozenset:
+        """Layers whose boundary exchange ships the post-transform width.
+
+        Empty unless `PipeConfig.slice_boundary`. A layer is sliced when
+        the TRAIN-mode base ordering picks transform-first for it and
+        fout <= fin (slicing a widening layer would grow the wire). Layer 0
+        never slices: its payload is the raw input features, needed at full
+        width on the consumer. Computed from `_base_orders(train=True)`
+        only, so the sliced set — and with it every buffer width — is
+        identical for train and eval steps."""
+        if not self.pipe.slice_boundary:
+            return frozenset()
+        dims = self.model.layer_dims()
+        orders = self._base_orders(topo, train=True)
+        return frozenset(
+            ell for ell in range(1, self.model.num_layers)
+            if orders[ell] == "transform-first"
+            and dims[ell][1] <= dims[ell][0])
+
+    def payload_widths(self, topo: Topology) -> tuple[int, ...]:
+        """Per-layer feature width of the boundary exchange payload: fin,
+        or fout for sliced layers. Stale buffers, wire-format resolution,
+        and the byte accounting all key off this table."""
+        dims = self.model.layer_dims()
+        sl = self.sliced_layers(topo)
+        return tuple(dims[ell][1] if ell in sl else dims[ell][0]
+                     for ell in range(self.model.num_layers))
+
+    def wire_codecs(self, topo: Topology) -> tuple:
+        """Per-layer boundary codec (repro.core.codec) the step encodes
+        with. A concrete `PipeConfig.wire` applies uniformly; "auto" picks
+        per layer by wire bytes over the payload widths
+        (repro.analysis.cost.choose_wire_formats — int4 is explicit-only)."""
+        L = self.model.num_layers
+        if self.pipe.wire != "auto":
+            return (make_codec(self.pipe.wire, self.pipe.wire_block),) * L
+        from repro.analysis.cost import choose_wire_formats
+        fmts = choose_wire_formats(self.payload_widths(topo),
+                                   block=self.pipe.wire_block)
+        return tuple(make_codec(f, self.pipe.wire_block) for f in fmts)
+
+    def _base_orders(self, topo: Topology, train: bool = True,
                      fused: bool | None = None) -> tuple[str, ...]:
         """Per-layer matmul ordering, resolved statically (trace-time).
 
@@ -568,9 +638,31 @@ class PipeGCN:
         from repro.analysis.cost import choose_gcn_orders
         if fused is None:
             fused = engine.name == "fused"
+        kw = {}
+        if self.pipe.slice_boundary:
+            # Co-decision with the wire codec: price each ordering's
+            # boundary bytes (transform-first ships the sliced fout width)
+            # so "auto" weighs comm against FLOPs. Formats here resolve on
+            # the UNSLICED fin widths — the sliced set is itself derived
+            # from this choice, so pricing must not depend on it.
+            from repro.analysis.cost import (DEFAULT_FLOPS_PER_WIRE_BYTE,
+                                             choose_wire_formats,
+                                             wire_bytes_per_row)
+            if self.pipe.wire == "auto":
+                fmts = choose_wire_formats(
+                    [f for f, _ in self.model.layer_dims()],
+                    block=self.pipe.wire_block)
+            else:
+                fmts = (self.pipe.wire,) * L
+            kw = dict(
+                slot_rows=float(topo.halo_size),
+                wire_bytes_fn=lambda ell, f, fmts=fmts: wire_bytes_per_row(
+                    fmts[ell], f, self.pipe.wire_block),
+                slice_boundary=True,
+                comm_flops_per_byte=DEFAULT_FLOPS_PER_WIRE_BYTE)
         return choose_gcn_orders(self.model.layer_dims(), topo.max_inner,
                                  combined, nnz_eff, train=train,
-                                 fused=fused, tile=TILE)
+                                 fused=fused, tile=TILE, **kw)
 
     def _layer_forward(self, tslice, w, b, h_prev, halo, drop_mask,
                        order: str = "aggregate-first",
@@ -675,40 +767,43 @@ class PipeGCN:
         h = data.x
         fuse = pipe.fused        # stale + fuse_exchange: deferred collectives
         orders = self.layer_orders(topo, train=train)   # static, per layer
+        sliced = self.sliced_layers(topo)
+        codecs = self.wire_codecs(topo)
+        pw = self.payload_widths(topo)
+        sage = self.model.kind == "sage"
         residuals = []
         new_feat = []
-        pending_feat = []        # fused mode: per-layer sends, exchanged once
-        feat_dtypes = []         # ... and their pre-compression dtypes
+        pending_feat = []        # fused mode: per-layer wires, exchanged once
+        feat_dtypes = []         # ... and their pre-encode dtypes
         dropout_rate = self.model.dropout if train else 0.0
+
+        def ship_feat(ell, payload):
+            """Encode one layer's (..., P, slot, pw) feature send, exchange
+            it (or queue it for the fused collective), decode, and return
+            the (..., P*slot, pw) halo the layer consumes this step."""
+            dtype = payload.dtype
+            wire = codecs[ell].encode(payload)
+            if fuse:
+                # Stale mode: the exchange result is consumed only at t+1,
+                # so defer the wire into the packed buffer and read this
+                # step's halo straight from the pipeline state.
+                pending_feat.append(wire)
+                feat_dtypes.append(dtype)
+                new_feat.append(None)   # filled after the fused exchange
+                return self._consume_buffer(buffers["feat"][ell])
+            fresh = codecs[ell].decode(backend.exchange(wire), pw[ell], dtype)
+            fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, pw[ell]))
+            if pipe.stale:
+                halo = self._consume_buffer(buffers["feat"][ell])
+                new_feat.append(self._update_buffer(
+                    buffers["feat"][ell], fresh, pipe.smooth_feat))
+            else:
+                halo = fresh
+                new_feat.append(buffers["feat"][ell])
+            return halo
 
         for ell in range(L):
             fin, fout = dims[ell]
-            # -- boundary feature communication --------------------------------
-            send = gather(h, send_idx, send_mask)       # (..., P, slot, fin)
-            send_dtype = send.dtype
-            if pipe.compress_boundary:
-                send = send.astype(jnp.bfloat16)
-            if fuse:
-                # Stale mode: the exchange result is consumed only at t+1,
-                # so defer the send into the packed buffer and read this
-                # step's halo straight from the pipeline state.
-                pending_feat.append(send)
-                feat_dtypes.append(send_dtype)
-                halo = self._consume_buffer(buffers["feat"][ell])
-                new_feat.append(None)   # filled after the fused exchange
-            else:
-                fresh = backend.exchange(send)          # received boundary feats
-                if pipe.compress_boundary:
-                    fresh = fresh.astype(send_dtype)
-                fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, fin))
-                if pipe.stale:
-                    halo = self._consume_buffer(buffers["feat"][ell])
-                    new_feat.append(self._update_buffer(
-                        buffers["feat"][ell], fresh, pipe.smooth_feat))
-                else:
-                    halo = fresh
-                    new_feat.append(buffers["feat"][ell])
-
             if dropout_rate > 0.0:
                 dkey = jax.random.fold_in(key, ell)
                 dm = backend.dropout_mask(
@@ -721,21 +816,50 @@ class PipeGCN:
             # Eval never needs residuals: skip the z output (the fused
             # kernel then skips its HBM write) and fuse the ReLU epilogue.
             fuse_relu = act and not train
-            if not lead:
-                u, (comb, z) = self._layer_forward(
-                    tslice, params[f"w{ell}"], params[f"b{ell}"], h, halo,
-                    dm, order=orders[ell], fuse_relu=fuse_relu,
-                    with_z=train)
+            if ell in sliced:
+                # Sliced boundary (order forced transform-first): transform
+                # the inner rows FIRST and ship the fout-wide result rows —
+                # the consumer aggregates already-transformed halo rows, so
+                # the wire carries fout <= fin columns. Dropout applies
+                # owner-side before the transform (a halo row arrives with
+                # its owner's inner-row mask baked in, instead of the
+                # consumer's halo mask) — identical to the unsliced
+                # schedule at dropout 0.
+                w, b = params[f"w{ell}"], params[f"b{ell}"]
+                w1 = w[:fin] if sage else w
+                h_in = h * dm[..., :max_inner, :] if dm is not None else h
+                hw = h_in @ w1
+                halo = ship_feat(ell, gather(hw, send_idx, send_mask))
+                src = jnp.concatenate([hw, halo], axis=-2)
+                if not lead:
+                    u = self.engine.spmm(tslice, src, max_inner) + b
+                else:
+                    u = jax.vmap(lambda ts, s: self.engine.spmm(
+                        ts, s, max_inner))(tslice, src) + b
+                if sage:
+                    u = u + h_in @ w[fin:]
+                if fuse_relu:
+                    u = jax.nn.relu(u)
+                # residual slot 0 holds the masked inner rows (the sliced
+                # backward needs h_in, never the full comb)
+                residuals.append((h_in, None, u, dm))
             else:
-                fwd = jax.vmap(
-                    lambda ts, h_, halo_, dm_, w_=params[f"w{ell}"],
-                           b_=params[f"b{ell}"], o_=orders[ell]:
-                    self._layer_forward(ts, w_, b_, h_, halo_, dm_,
-                                        order=o_, fuse_relu=fuse_relu,
-                                        with_z=train),
-                    in_axes=(0, 0, 0, 0 if dm is not None else None))
-                u, (comb, z) = fwd(tslice, h, halo, dm)
-            residuals.append((comb, z, u, dm))
+                halo = ship_feat(ell, gather(h, send_idx, send_mask))
+                if not lead:
+                    u, (comb, z) = self._layer_forward(
+                        tslice, params[f"w{ell}"], params[f"b{ell}"], h,
+                        halo, dm, order=orders[ell], fuse_relu=fuse_relu,
+                        with_z=train)
+                else:
+                    fwd = jax.vmap(
+                        lambda ts, h_, halo_, dm_, w_=params[f"w{ell}"],
+                               b_=params[f"b{ell}"], o_=orders[ell]:
+                        self._layer_forward(ts, w_, b_, h_, halo_, dm_,
+                                            order=o_, fuse_relu=fuse_relu,
+                                            with_z=train),
+                        in_axes=(0, 0, 0, 0 if dm is not None else None))
+                    u, (comb, z) = fwd(tslice, h, halo, dm)
+                residuals.append((comb, z, u, dm))
             h = jax.nn.relu(u) if act and not fuse_relu else u
 
         if fuse:
@@ -743,13 +867,14 @@ class PipeGCN:
             # after the last layer. Nothing downstream of it is consumed
             # this step (results land in the t+1 buffers), so XLA is free
             # to overlap it with the loss/backward/optimizer compute.
-            for ell, fresh in enumerate(backend.fused_exchange(pending_feat)):
-                # restore the layer's own pre-pack dtype: undoes the bf16
-                # wire compression AND any promotion from packing layers
+            for ell, fresh in enumerate(
+                    fused_exchange_encoded(backend, pending_feat)):
+                # decode restores the layer's own pre-pack dtype: undoes
+                # the wire encoding AND any promotion from packing layers
                 # of different dtypes into one buffer
-                fresh = fresh.astype(feat_dtypes[ell])
+                fresh = codecs[ell].decode(fresh, pw[ell], feat_dtypes[ell])
                 fresh = fresh.reshape(
-                    fresh.shape[:-3] + (P * topo.slot, dims[ell][0]))
+                    fresh.shape[:-3] + (P * topo.slot, pw[ell]))
                 new_feat[ell] = self._update_buffer(
                     buffers["feat"][ell], fresh, pipe.smooth_feat)
 
@@ -772,12 +897,73 @@ class PipeGCN:
         # -- manual backward (Alg. 1 lines 17–30) --------------------------
         grads = {}
         new_grad = [None] * L
-        pending_grad = []        # fused mode: (ell, db) per layer, one exchange
+        pending_grad = []        # fused mode: (ell, wire, dtype), one exchange
+        combined = max_inner + P * topo.slot
+
+        def ship_grad(ell, db, compute_dtype):
+            """Encode one layer's (..., P, slot, pw) gradient send, exchange
+            it (or queue it for the fused collective), decode, scatter to
+            owner rows, and return the contribution the backward consumes
+            this step (stale buffer in pipelined mode, fresh in vanilla)."""
+            # dtype the scatter sees: the payload's own under the identity
+            # codec, the compute dtype after any lossy wire
+            dtype = db.dtype if codecs[ell].name == "f32" else compute_dtype
+            wire = codecs[ell].encode(db)
+            if fuse:
+                # Deferred: the stale contribution comes from the t-1 (or
+                # t-k) buffer; the fresh wire joins the packed buffer for
+                # the single post-backward collective.
+                pending_grad.append((ell, wire, dtype))
+                return self._consume_buffer(buffers["grad"][ell])
+            db_recv = codecs[ell].decode(backend.exchange(wire), pw[ell],
+                                         dtype)
+            fresh_contrib = scatter(db_recv, send_idx, send_mask)
+            if pipe.stale:
+                contrib = self._consume_buffer(buffers["grad"][ell])
+                new_grad[ell] = self._update_buffer(
+                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+            else:
+                contrib = fresh_contrib
+                new_grad[ell] = buffers["grad"][ell]
+            return contrib
+
         j = dlogits
         for ell in reversed(range(L)):
             comb, z, u, dm = residuals[ell]
             du = j if ell == L - 1 else j * (u > 0).astype(j.dtype)
-            gb_local = jnp.sum(du, axis=-2)
+            grads[f"b{ell}"] = backend.psum(jnp.sum(du, axis=-2))
+            if ell in sliced:
+                # Sliced backward (transform-first, fout-wide exchange):
+                # ship the PRE-w1 halo rows of dhw = Pᵀ·du back to their
+                # owners and fold the (stale) owner contributions into the
+                # inner dhw rows before the weight gradient and the w1ᵀ
+                # application — scatter commutes with both by linearity, so
+                # vanilla mode reproduces the unsliced step exactly.
+                fin, fout = dims[ell]
+                w = params[f"w{ell}"]
+                w1 = w[:fin] if sage else w
+                h_in = comb      # residual slot 0 = masked inner rows
+                if not lead:
+                    dhw = self.engine.spmm_t(tslice, du, combined)
+                else:
+                    dhw = jax.vmap(lambda ts, d: self.engine.spmm_t(
+                        ts, d, combined))(tslice, du)
+                db = dhw[..., max_inner:, :]
+                db = db.reshape(db.shape[:-2] + (P, topo.slot, fout))
+                contrib = ship_grad(ell, db, j.dtype)
+                dhw_eff = dhw[..., :max_inner, :] + contrib
+                gw = jnp.swapaxes(h_in, -1, -2) @ dhw_eff
+                if sage:
+                    gw = jnp.concatenate(
+                        [gw, jnp.swapaxes(h_in, -1, -2) @ du], axis=-2)
+                grads[f"w{ell}"] = backend.psum(gw)
+                dh = dhw_eff @ w1.T
+                if sage:
+                    dh = dh + du @ w[fin:].T
+                if dm is not None:
+                    dh = dh * dm[..., :max_inner, :]
+                j = dh           # owner contributions already folded in
+                continue
             need_dcomb = ell > 0    # Alg. 1 stops the backward at layer 0
             if not lead:
                 gw_local, dh_local, db = self._layer_backward(
@@ -794,44 +980,21 @@ class PipeGCN:
                              0 if dm is not None else None))
                 gw_local, dh_local, db = bwd(tslice, du, comb, z, dm)
             grads[f"w{ell}"] = backend.psum(gw_local)
-            grads[f"b{ell}"] = backend.psum(gb_local)
             if ell == 0:
                 new_grad[ell] = buffers["grad"][ell]
                 break
             db = db.reshape(db.shape[:-2] + (P, topo.slot, dims[ell][0]))
             # -- boundary gradient communication ---------------------------
-            # dtype the per-layer schedule would hand to the scatter:
-            # decompressed to j.dtype, or the payload's own dtype
-            db_dtype = j.dtype if pipe.compress_boundary else db.dtype
-            if pipe.compress_boundary:
-                db = db.astype(jnp.bfloat16)
-            if fuse:
-                # Deferred: the stale contribution comes from the t-1 (or
-                # t-k) buffer; the fresh send joins the packed buffer for
-                # the single post-backward collective.
-                pending_grad.append((ell, db, db_dtype))
-                contrib = self._consume_buffer(buffers["grad"][ell])
-            else:
-                db_recv = backend.exchange(db)
-                if pipe.compress_boundary:
-                    db_recv = db_recv.astype(j.dtype)
-                fresh_contrib = scatter(db_recv, send_idx, send_mask)
-                if pipe.stale:
-                    contrib = self._consume_buffer(buffers["grad"][ell])
-                    new_grad[ell] = self._update_buffer(
-                        buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
-                else:
-                    contrib = fresh_contrib
-                    new_grad[ell] = buffers["grad"][ell]
-            j = dh_local + contrib
+            j = dh_local + ship_grad(ell, db, j.dtype)
 
         if fuse and pending_grad:
             # ONE collective for all L-1 boundary-gradient sends (layer 0
             # sends nothing — Alg. 1 stops its backward at the first layer).
-            recvs = backend.fused_exchange([db for _, db, _ in pending_grad])
-            for (ell, _, db_dtype), db_recv in zip(pending_grad, recvs):
-                # restore this layer's pre-pack dtype (see forward unpack)
-                db_recv = db_recv.astype(db_dtype)
+            recvs = fused_exchange_encoded(backend,
+                                           [w_ for _, w_, _ in pending_grad])
+            for (ell, _, dtype), db_recv in zip(pending_grad, recvs):
+                # decode restores this layer's pre-pack dtype (see forward)
+                db_recv = codecs[ell].decode(db_recv, pw[ell], dtype)
                 fresh_contrib = scatter(db_recv, send_idx, send_mask)
                 new_grad[ell] = self._update_buffer(
                     buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
@@ -903,6 +1066,10 @@ class PipeGCN:
         fuse = pipe.fused
         # fused=False: the split runs the composed (non-epilogue) path.
         orders = self.layer_orders(topo, train=train, fused=False)
+        # Slicing never reaches the split (`_split_active` rejects it), but
+        # every wire codec does: the phase split repositions the exchange,
+        # the codec only changes what the exchange carries.
+        codecs = self.wire_codecs(topo)
         residuals = []
         new_feat = [None] * L
         pending_feat = []
@@ -915,9 +1082,8 @@ class PipeGCN:
         # flush_feat: the ONE packed collective, payload order [0..L-1]
         # (identical to the unsplit fused pack, hence bit-identical).
         def land_feat(ell, send, send_dtype):
-            fresh = backend.exchange(send)
-            if pipe.compress_boundary:
-                fresh = fresh.astype(send_dtype)
+            fresh = codecs[ell].decode(backend.exchange(send), dims[ell][0],
+                                       send_dtype)
             fresh = fresh.reshape(
                 fresh.shape[:-3] + (P * topo.slot, dims[ell][0]))
             if pipe.stale:
@@ -935,25 +1101,24 @@ class PipeGCN:
             return self._consume_buffer(buffers["feat"][ell])
 
         def flush_feat():
-            for ell, fresh in enumerate(backend.fused_exchange(pending_feat)):
-                fresh = fresh.astype(feat_dtypes[ell])
+            for ell, fresh in enumerate(
+                    fused_exchange_encoded(backend, pending_feat)):
+                fresh = codecs[ell].decode(fresh, dims[ell][0],
+                                           feat_dtypes[ell])
                 fresh = fresh.reshape(
                     fresh.shape[:-3] + (P * topo.slot, dims[ell][0]))
                 new_feat[ell] = self._update_buffer(
                     buffers["feat"][ell], fresh, pipe.smooth_feat)
 
-        def prep_send(payload):
-            dtype = payload.dtype
-            if pipe.compress_boundary:
-                payload = payload.astype(jnp.bfloat16)
-            return payload, dtype
+        def prep_send(ell, payload):
+            return codecs[ell].encode(payload), payload.dtype
 
         # -- forward -------------------------------------------------------
         # Layer 0's payload is x itself — available before any compute, so
         # its exchange is issued (or queued) ahead of the loop. For L == 1
         # the fused pack is complete right away and flushes here too.
         h = data.x
-        send, send_dtype = prep_send(gather(h, send_idx, send_mask))
+        send, send_dtype = prep_send(0, gather(h, send_idx, send_mask))
         if fuse:
             halo = defer_feat(0, send, send_dtype)
             if L == 1:
@@ -990,7 +1155,7 @@ class PipeGCN:
             # payload rows all live in the tail just produced.
             if ell + 1 < L:
                 send, send_dtype = prep_send(
-                    gather_tail(h_bt, send_idx, send_mask))
+                    ell + 1, gather_tail(h_bt, send_idx, send_mask))
                 if fuse:
                     halo = defer_feat(ell + 1, send, send_dtype)
                     if ell + 1 == L - 1:
@@ -1040,9 +1205,10 @@ class PipeGCN:
         pending_grad = []
 
         def flush_grad():
-            recvs = backend.fused_exchange([d for _, d, _ in pending_grad])
+            recvs = fused_exchange_encoded(backend,
+                                           [d for _, d, _ in pending_grad])
             for (ell, _, db_dtype), db_recv in zip(pending_grad, recvs):
-                db_recv = db_recv.astype(db_dtype)
+                db_recv = codecs[ell].decode(db_recv, dims[ell][0], db_dtype)
                 fresh_contrib = scatter(db_recv, send_idx, send_mask)
                 new_grad[ell] = self._update_buffer(
                     buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
@@ -1098,18 +1264,16 @@ class PipeGCN:
             # the exchange before the interior phase runs.
             db = d_bt[..., max_inner - ct:, :]
             db = db.reshape(db.shape[:-2] + (P, topo.slot, fin))
-            db_dtype = j.dtype if pipe.compress_boundary else db.dtype
-            if pipe.compress_boundary:
-                db = db.astype(jnp.bfloat16)
+            db_dtype = db.dtype if codecs[ell].name == "f32" else j.dtype
+            wire = codecs[ell].encode(db)
             if fuse:
-                pending_grad.append((ell, db, db_dtype))
+                pending_grad.append((ell, wire, db_dtype))
                 contrib = self._consume_buffer(buffers["grad"][ell])
                 if ell == 1:
                     flush_grad()   # last backward payload -> issue now
             else:
-                db_recv = backend.exchange(db)
-                if pipe.compress_boundary:
-                    db_recv = db_recv.astype(j.dtype)
+                db_recv = codecs[ell].decode(backend.exchange(wire), fin,
+                                             db_dtype)
                 fresh_contrib = scatter(db_recv, send_idx, send_mask)
                 if pipe.stale:
                     contrib = self._consume_buffer(buffers["grad"][ell])

@@ -171,3 +171,42 @@ def traced_step_collectives(model, mesh, topo, data, axis_name="parts",
     buffers = model.init_buffers(topo)
     return collective_counts(step, topo, params, buffers, data,
                              jax.random.PRNGKey(0))
+
+
+def traced_wire_bytes(fn, *args) -> int:
+    """Total bytes-on-wire of every `all_to_all` in a traced `fn(*args)`.
+
+    Sums, over each all_to_all eqn anywhere in the jaxpr (recursing into
+    shard_map/pjit bodies), the operand's per-device element count times
+    its dtype itemsize — i.e. the bytes ONE device hands the collective
+    per step. This is the quantity the boundary codecs shrink: a bf16
+    wire halves it, int8/int4 shrink it ~4x/~8x (plus the scale region),
+    and feature slicing shrinks the payload width itself. Shape-and-dtype
+    static, so the figure is exact, device-free, and diffable in CI."""
+    jx = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def walk(jxr):
+        nonlocal total
+        for eqn in jxr.eqns:
+            if eqn.primitive.name == "all_to_all":
+                for v in eqn.invars:
+                    total += int(v.aval.size) * v.aval.dtype.itemsize
+            for v in eqn.params.values():
+                for sub in _iter_subjaxprs(v):
+                    walk(sub)
+
+    walk(jx.jaxpr)
+    return total
+
+
+def traced_step_wire_bytes(model, mesh, topo, data, axis_name="parts",
+                           train: bool = True) -> int:
+    """`traced_wire_bytes` of a `PipeGCN.make_spmd_step` with fresh
+    params/buffers — the per-device boundary bytes one training (or eval)
+    step puts on the wire under the model's codec/slicing config."""
+    step = model.make_spmd_step(mesh, topo, axis_name, train=train)
+    params = model.init_params(jax.random.PRNGKey(0))
+    buffers = model.init_buffers(topo)
+    return traced_wire_bytes(step, topo, params, buffers, data,
+                             jax.random.PRNGKey(0))

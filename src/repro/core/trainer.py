@@ -18,6 +18,10 @@ from repro.optim import Optimizer, adam
 
 @dataclasses.dataclass
 class TrainResult:
+    """Outcome of one `train_pipegcn` run: the eval-metric trajectory
+    (`history` lists loss / val_acc / test_acc / epoch), the final
+    parameters, the last metric dict, and the wall-clock epoch rate."""
+
     history: dict          # lists: loss, val_acc, test_acc, epoch_time
     params: dict
     final_metrics: dict
@@ -115,6 +119,14 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
         log(f"matmul order ({how}, agg={model_cfg.agg}): "
             + " ".join(f"L{i}:{'PH.W' if o == 'aggregate-first' else 'P.HW'}"
                        for i, o in enumerate(orders)))
+        if pipe_cfg.wire != "f32" or pipe_cfg.slice_boundary:
+            codecs = model.wire_codecs(topo)
+            widths = model.payload_widths(topo)
+            sl = model.sliced_layers(topo)
+            log("boundary wire: " + " ".join(
+                f"L{i}:{c.name}x{w}{'s' if i in sl else ''}"
+                for i, (c, w) in enumerate(zip(codecs, widths)))
+                + (" (s = sliced to the post-transform width)" if sl else ""))
         layout = getattr(pipeline, "layout", "natural")
         if topo.tile_rows is not None:
             from repro.analysis.cost import graph_layout_report

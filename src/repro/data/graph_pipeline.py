@@ -54,6 +54,12 @@ def from_local_layout(tree, axis: int = 0):
 
 @dataclasses.dataclass
 class GraphDataPipeline:
+    """Device-ready view of one partitioned graph dataset: the Topology,
+    the three ShardedData splits (train/val/test share the packed
+    feature/label arrays), and the build-time knobs that shaped them
+    (`agg` engine, resolved node `layout`). Construct via `build`; eval
+    metrics route back through `metric` (unpacks the node permutation)."""
+
     dataset: GraphDataset
     pg: PartitionedGraph
     topo: Topology

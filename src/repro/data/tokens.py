@@ -13,6 +13,10 @@ import numpy as np
 
 @dataclasses.dataclass
 class TokenStream:
+    """Endless synthetic token batches for the LM workload: Zipf-distributed
+    ids with injected copy structure, yielded as (batch_size, seq_len)
+    input/target dicts. Deterministic per `seed`."""
+
     vocab_size: int
     seq_len: int
     batch_size: int

@@ -51,7 +51,8 @@ def run_gcn(args) -> dict:
     import dataclasses
     pc = dataclasses.replace(PipeConfig.named(args.variant, gamma=args.gamma),
                              fuse_exchange=not args.no_fuse_exchange,
-                             overlap=args.overlap)
+                             overlap=args.overlap, wire=args.wire,
+                             slice_boundary=args.slice_boundary)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
                         eval_every=args.eval_every, log=print, mesh=mesh)
@@ -64,6 +65,8 @@ def run_gcn(args) -> dict:
            "layout": pipeline.layout,
            "fuse_exchange": pc.fuse_exchange,
            "overlap": pc.overlap,
+           "wire": pc.wire,
+           "slice_boundary": pc.slice_boundary,
            "split_feasible": pipeline.split_spec() is not None,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
@@ -164,6 +167,19 @@ def main():
                     help="revert stale variants to the blocking per-layer "
                          "boundary exchange (2L-1 collectives/step instead "
                          "of the fused-deferred 2)")
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "bf16", "int8", "int4", "auto"],
+                    help="boundary wire format (default f32 = native "
+                         "dtype): bf16 halves the exchanged bytes; "
+                         "int8/int4 are blockwise-scaled quantization "
+                         "(~4x/~8x smaller, per-128-column f32 scales ride "
+                         "in the payload — see docs/wire-format.md); auto "
+                         "picks bf16-vs-int8 per layer by wire bytes")
+    ap.add_argument("--slice-boundary", action="store_true",
+                    help="feature-dimension slicing: layers the cost model "
+                         "runs transform-first ship the post-transform "
+                         "width F_out <= F_in instead of F_in (default "
+                         "off; incompatible with --overlap split-phase)")
     ap.add_argument("--gamma", type=float, default=0.95)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--eval-every", type=int, default=20)

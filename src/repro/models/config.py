@@ -10,6 +10,10 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
+    """Static architecture description of one assigned transformer/SSM/MoE
+    model family — every structural knob the LM builder consumes, with
+    `reduced()` producing the small-config variant the tests train."""
+
     arch_id: str
     family: str                      # dense | moe | ssm | hybrid | vlm | audio
 
@@ -164,6 +168,9 @@ class ArchConfig:
 
 @dataclasses.dataclass(frozen=True)
 class InputShape:
+    """One named workload shape (sequence length, global batch, and
+    train/prefill/decode mode) from the INPUT_SHAPES registry."""
+
     name: str
     seq_len: int
     global_batch: int

@@ -37,6 +37,10 @@ NEG_INF = -1e30
 
 @dataclasses.dataclass(frozen=True)
 class HaloConfig:
+    """Config of the halo-attention demo model: a windowed-attention LM
+    whose cross-shard key/value halo is exchanged PipeGCN-style (`stale`
+    defers it one step; `smooth`/`gamma` apply the EMA variant)."""
+
     d_model: int = 128
     num_heads: int = 4
     num_layers: int = 2

@@ -36,6 +36,9 @@ MOE_AUX_COEF = 0.01
 
 
 class LayerSpec(NamedTuple):
+    """Shape of one decoder layer: which sequence mixer it runs, whether a
+    cross-attention sublayer follows, and which FFN kind closes it."""
+
     mixer: str          # attn | mla | ssd | rglru | xattn
     cross: bool         # additional cross-attn sublayer (whisper decoder)
     ffn: str            # dense | moe | none

@@ -48,6 +48,9 @@ def clip_by_global_norm(tree, max_norm: float):
 
 
 class OptState(NamedTuple):
+    """Optimizer state threaded through `Optimizer.apply`: the step counter
+    and the first/second moment pytrees (nu is empty for plain SGD)."""
+
     step: jax.Array
     mu: dict          # first moment (or momentum)
     nu: dict          # second moment (empty dict for sgd)

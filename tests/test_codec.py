@@ -1,0 +1,499 @@
+"""Boundary codecs (int8/int4 blockwise quantization) + feature slicing.
+
+Three layers of gating for the quantized wire formats:
+
+1. codec unit tests — wire widths agree with the analysis cost model,
+   quantization error respects the documented ``scale/2`` bound (hypothesis
+   property), zeros/odd-widths/empty shapes round-trip, and the int4 nibble
+   layout matches the normative spec in ``docs/wire-format.md`` byte for
+   byte.
+2. model-level parity — feature slicing is exact (1e-12, f64) against the
+   unsliced model in vanilla mode, sliced buffers take the post-transform
+   width, and neither codecs nor slicing change the traced collective
+   counts.
+3. traffic + convergence — `traced_wire_bytes` equals the analytic
+   per-row byte formula for every wire format, and an int8 wire still
+   trains the tier-1 smoke model to the same bar as the f32 wire (the
+   slow-tier accuracy-delta sweep covers int4 and deeper staleness).
+
+Cross-backend (shard_map) quantized cells live in test_pipegcn_spmd.py;
+fused-vs-per-layer codec parity cells live in test_fused_exchange.py.
+"""
+import dataclasses
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, st
+
+from repro.analysis.cost import (DEFAULT_FLOPS_PER_WIRE_BYTE,
+                                 choose_wire_formats, gcn_order_report,
+                                 wire_bytes_per_row)
+from repro.core.codec import (WIRE_BLOCK, WIRE_FORMATS, QuantCodec, byteify,
+                              make_codec, unbyteify)
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN, shard_data, topology_from
+from repro.core.trace_utils import (traced_step_collectives,
+                                    traced_step_wire_bytes)
+from repro.graph import build_partitioned_graph, make_dataset, partition_graph
+from repro.graph.csr import mean_normalized
+from repro.launch.mesh import make_partition_mesh
+
+P = 4
+
+WIDTHS = [0, 1, 2, 7, 16, 127, 128, 129, 130, 256]
+
+
+# ----------------------------------------------------------------------
+# 1. codec unit tests
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", WIRE_FORMATS)
+@pytest.mark.parametrize("f", WIDTHS)
+def test_wire_width_agrees_with_cost_model(wire, f):
+    """codec.wire_bytes IS the analysis-side wire_bytes_per_row, and the
+    encoded array really has wire_width columns."""
+    codec = make_codec(wire)
+    assert codec.wire_bytes(f) == wire_bytes_per_row(wire, f, WIRE_BLOCK)
+    x = jax.random.normal(jax.random.PRNGKey(f), (3, f), jnp.float32)
+    wire_arr = codec.encode(x)
+    assert wire_arr.shape == (3, codec.wire_width(f))
+    if wire in ("int8", "int4"):
+        assert wire_arr.dtype == jnp.uint8
+    back = codec.decode(wire_arr, f, jnp.float32)
+    assert back.shape == x.shape and back.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("f", [1, 2, 7, 16, 127, 128, 129, 130])
+def test_quant_roundtrip_error_bound(bits, f):
+    """|decode(encode(x)) - x| <= scale/2 per element, scale = amax/qmax
+    over that element's 128-column block (the documented bound)."""
+    codec = make_codec(f"int{bits}")
+    x = 10.0 * jax.random.normal(jax.random.PRNGKey(bits * 1000 + f),
+                                 (5, f), jnp.float64)
+    back = codec.decode(codec.encode(x), f, jnp.float64)
+    nb = -(-f // WIRE_BLOCK)
+    xp = jnp.pad(x, ((0, 0), (0, nb * WIRE_BLOCK - f)))
+    amax = jnp.max(jnp.abs(xp.reshape(5, nb, WIRE_BLOCK)), axis=-1)
+    bound = jnp.repeat(amax / (2 * codec.qmax), WIRE_BLOCK, -1)[:, :f]
+    err = jnp.abs(back - x)
+    assert float(jnp.max(err - bound)) <= 1e-6, (bits, f, float(err.max()))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_zeros_roundtrip_exact(bits):
+    """All-zero payloads (cold stale buffers at t=0) use scale 1 and must
+    reconstruct exactly zero — not NaN from a 0/0 scale."""
+    codec = make_codec(f"int{bits}")
+    for f in (1, 130):
+        z = jnp.zeros((4, f), jnp.float32)
+        back = codec.decode(codec.encode(z), f, jnp.float32)
+        assert float(jnp.abs(back).max()) == 0.0
+    # mixed: one all-zero block next to a live block
+    x = jnp.concatenate([jnp.zeros((2, WIRE_BLOCK)),
+                         jnp.ones((2, 3))], axis=-1)
+    back = codec.decode(codec.encode(x), x.shape[-1], jnp.float32)
+    assert float(jnp.abs(back[:, :WIRE_BLOCK]).max()) == 0.0
+    assert float(jnp.abs(back[:, WIRE_BLOCK:] - 1.0).max()) < 1e-6
+
+
+@pytest.mark.parametrize("wire", WIRE_FORMATS)
+def test_codec_zero_rows_and_zero_width(wire):
+    """Degenerate boundary slots: 0 rows (an isolated partition) and 0
+    feature columns both encode/decode to empty arrays of the right shape."""
+    codec = make_codec(wire)
+    for shape in [(0, 7), (P, 0, 7), (3, 0)]:
+        f = shape[-1]
+        x = jnp.zeros(shape, jnp.float32)
+        wire_arr = codec.encode(x)
+        assert wire_arr.shape == shape[:-1] + (codec.wire_width(f),)
+        back = codec.decode(wire_arr, f, jnp.float32)
+        assert back.shape == shape
+
+
+def test_int4_nibble_layout_matches_spec():
+    """Pin the normative docs/wire-format.md layout: low nibble = even
+    column, odd trailing column zero-padded, scales trail as little-endian
+    f32 bytes."""
+    codec = QuantCodec(bits=4, block=WIRE_BLOCK)
+    x = jnp.asarray([[3.0, -15.0, 21.0]])          # amax 21 -> scale 3
+    wire = np.asarray(codec.encode(x))
+    assert wire.shape == (1, 2 + 4)                # ceil(3/2) payload + 4 scale
+    # q = round(x/3) = [1, -5, 7]; -5 -> 0xB two's-complement nibble
+    assert wire[0, 0] == (1 | (0xB << 4))
+    assert wire[0, 1] == 7                         # high nibble = zero pad
+    assert np.frombuffer(wire[0, 2:].tobytes(),
+                         dtype=np.float32)[0] == np.float32(3.0)
+    back = np.asarray(codec.decode(jnp.asarray(wire), 3, jnp.float32))
+    np.testing.assert_allclose(back, [[3.0, -15.0, 21.0]], atol=1e-6)
+
+
+def test_quant_custom_block_size():
+    """wire_block is honoured: block=8 over f=20 gives 3 scale blocks and
+    a per-block bound tighter than one global scale could give."""
+    codec = QuantCodec(bits=8, block=8)
+    f = 20
+    assert codec.wire_width(f) == f + 4 * 3
+    x = jnp.concatenate([1e-3 * jnp.ones((2, 8)), 1e3 * jnp.ones((2, 12))],
+                        axis=-1)
+    back = codec.decode(codec.encode(x), f, jnp.float32)
+    # the small block keeps its own scale -> relative error stays ~1/qmax
+    assert float(jnp.abs(back[:, :8] - 1e-3).max()) < 1e-3 / 100
+
+
+@given(f=st.integers(min_value=0, max_value=40),
+       bits=st.sampled_from([8, 4]),
+       block=st.sampled_from([4, 8, 128]),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_quant_roundtrip_property(f, bits, block, seed):
+    """Property: for ANY width/block/bits, shapes agree with wire_width
+    and the per-block scale/2 error bound holds."""
+    codec = QuantCodec(bits=bits, block=block)
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(seed), (3, f), jnp.float64)
+    wire = codec.encode(x)
+    assert wire.shape == (3, codec.wire_width(f)) and wire.dtype == jnp.uint8
+    back = codec.decode(wire, f, jnp.float64)
+    assert back.shape == x.shape
+    if f == 0:
+        return
+    nb = -(-f // block)
+    xp = jnp.pad(x, ((0, 0), (0, nb * block - f)))
+    amax = jnp.max(jnp.abs(xp.reshape(3, nb, block)), axis=-1)
+    bound = jnp.repeat(amax / (2 * codec.qmax), block, -1)[:, :f]
+    assert float(jnp.max(jnp.abs(back - x) - bound)) <= 1e-6
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float64,
+                                   jnp.uint8])
+def test_byteify_roundtrip(dtype):
+    """byteify/unbyteify (the mixed-dtype fused-pack planarizer) is exact
+    for every wire dtype, including the uint8 pass-through."""
+    x = jnp.arange(24).reshape(2, 3, 4).astype(dtype)
+    b, it, dt = byteify(x)
+    assert b.dtype == jnp.uint8 and b.shape == (2, 3, 4 * it)
+    assert it == jnp.dtype(dtype).itemsize and dt == x.dtype
+    back = unbyteify(b, it, dt)
+    assert back.dtype == x.dtype and jnp.array_equal(back, x)
+
+
+def test_make_codec_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown wire format"):
+        make_codec("fp8")
+
+
+# ----------------------------------------------------------------------
+# 2. config + cost-model plumbing
+# ----------------------------------------------------------------------
+
+def test_config_wire_validation():
+    assert PipeConfig(wire="int8").wire == "int8"
+    with pytest.raises(ValueError):
+        PipeConfig(wire="fp8")
+    with pytest.raises(ValueError):
+        PipeConfig(wire_block=0)
+    with pytest.raises(ValueError):
+        PipeConfig(slice_boundary=True, overlap="split-phase")
+
+
+def test_compress_boundary_is_bf16_alias():
+    """The deprecated flag normalizes to wire='bf16'; combining it with a
+    conflicting explicit wire is an error, with a matching wire is fine."""
+    assert PipeConfig(compress_boundary=True).wire == "bf16"
+    assert PipeConfig(compress_boundary=True, wire="bf16").wire == "bf16"
+    with pytest.raises(ValueError, match="compress_boundary"):
+        PipeConfig(compress_boundary=True, wire="int8")
+
+
+def test_choose_wire_formats_prefers_fidelity_on_ties():
+    """Per width: fewest bytes wins; exact byte ties go to the earliest
+    candidate (bf16 before int8 -> higher fidelity at equal cost)."""
+    # f=16: bf16 = 32 B, int8 = 16+4 = 20 B -> int8
+    # f=4 : bf16 =  8 B, int8 =  4+4 =  8 B -> tie -> bf16
+    assert choose_wire_formats((16, 4)) == ("int8", "bf16")
+    assert choose_wire_formats((), candidates=("bf16",)) == ()
+    assert choose_wire_formats((16,), candidates=("int4", "int8")) == ("int4",)
+
+
+def test_wire_bytes_per_row_formulas():
+    assert wire_bytes_per_row("f32", 10) == 40.0
+    assert wire_bytes_per_row("bf16", 10) == 20.0
+    assert wire_bytes_per_row("int8", 10) == 14.0       # 10 + 1 block * 4
+    assert wire_bytes_per_row("int4", 11) == 10.0       # ceil(11/2) + 4
+    assert wire_bytes_per_row("int8", 0) == 0.0
+    assert wire_bytes_per_row("int8", 130, block=128) == 130 + 8.0
+    with pytest.raises(ValueError):
+        wire_bytes_per_row("fp8", 10)
+
+
+def test_order_report_comm_pricing_flips_choice():
+    """With boundary bytes priced in, a layer that shrinks 64->8 flips to
+    transform-first once comm is expensive enough; with pricing off
+    (defaults) the report is the classic FLOP argmin and still carries the
+    wire_bytes figure. Layer 0 always prices fin — its payload is the raw
+    input — so the shrink shows up on layer 1 only."""
+    dims = [(64, 64), (64, 8)]
+    kw = dict(num_rows=64, combined=128, nnz_eff=256.0, train=True)
+    base = gcn_order_report(dims, **kw)
+    assert all("wire_bytes" in r for r in base)
+    priced = gcn_order_report(
+        dims, slot_rows=1e4, slice_boundary=True,
+        comm_flops_per_byte=DEFAULT_FLOPS_PER_WIRE_BYTE, **kw)
+    wb0, wb1 = priced[0]["wire_bytes"], priced[1]["wire_bytes"]
+    assert wb0["transform-first"] == wb0["aggregate-first"]
+    assert wb1["transform-first"] < wb1["aggregate-first"]
+    assert priced[1]["chosen"] == "transform-first"
+
+
+# ----------------------------------------------------------------------
+# 3. model-level: slicing parity, buffer widths, collective counts
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("tiny")
+    prop = mean_normalized(ds.graph)
+    pg = build_partitioned_graph(prop, partition_graph(ds.graph, P, seed=0), P)
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+    return ds, topo, data
+
+
+def _pair(ds, num_layers=3, kind="sage", agg="coo", **pipe_kw):
+    mc = ModelConfig(kind=kind, feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=num_layers, num_classes=ds.num_classes,
+                     dropout=0.0, agg=agg,
+                     matmul_order=pipe_kw.pop("matmul_order",
+                                              "aggregate-first"))
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return mc, pc
+
+
+@pytest.mark.parametrize("kind,agg", [("sage", "coo"), ("gcn", "blocksparse")])
+def test_sliced_equals_unsliced_vanilla(setup, kind, agg):
+    """Slicing reroutes WHERE the transform runs (owner side vs halo side),
+    not what is computed: in vanilla (fresh-exchange) mode the sliced and
+    unsliced models must agree to f64 round-off on loss and every grad."""
+    ds, topo, data = setup
+    mc, pc = _pair(ds, kind=kind, agg=agg, stale=False,
+                   matmul_order="transform-first", overlap="none")
+    ref = PipeGCN(mc, pc)
+    sli = PipeGCN(mc, dataclasses.replace(pc, slice_boundary=True))
+    assert sli.sliced_layers(topo), "no layer sliced — cell is vacuous"
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_sli = sli.init_buffers(topo, dtype=jnp.float64)
+    for t in range(3):
+        key = jax.random.PRNGKey(t)
+        l0, g0, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_sli, _ = sli.train_step(topo, params, b_sli, data, key)
+        assert abs(float(l0) - float(l1)) < 1e-12, (kind, agg, t)
+        for k in g0:
+            d = float(jnp.abs(g0[k] - g1[k]).max())
+            assert d < 1e-12, (kind, agg, t, k, d)
+
+
+def test_sliced_buffers_take_post_transform_width(setup):
+    """Sliced layers ship (and buffer) fout, not fin; layer 0 is never
+    sliced (its payload is the raw input feature)."""
+    ds, topo, data = setup
+    mc, pc = _pair(ds, matmul_order="transform-first", overlap="none",
+                   slice_boundary=True)
+    model = PipeGCN(mc, pc)
+    sl = model.sliced_layers(topo)
+    assert 0 not in sl and sl, sl
+    dims = mc.layer_dims()
+    pw = model.payload_widths(topo)
+    for ell in range(mc.num_layers):
+        assert pw[ell] == (dims[ell][1] if ell in sl else dims[ell][0])
+    bufs = model.init_buffers(topo, dtype=jnp.float64)
+    for ell in sl:
+        assert bufs["feat"][ell].shape[-1] == dims[ell][1]
+        assert bufs["grad"][ell].shape[-1] == dims[ell][1]
+    # stale sliced training runs and produces finite numbers
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    for t in range(3):
+        loss, grads, bufs, _ = model.train_step(topo, params, bufs, data,
+                                                jax.random.PRNGKey(t))
+        assert np.isfinite(float(loss))
+
+
+def test_sliced_quantized_fused_equals_perlayer(setup):
+    """Slicing + int8 wire + staleness: the fused one-collective schedule
+    still matches the per-layer schedule bit-for-bit."""
+    ds, topo, data = setup
+    mc, pc = _pair(ds, matmul_order="transform-first", overlap="none",
+                   slice_boundary=True, wire="int8", staleness_steps=2)
+    ref = PipeGCN(mc, dataclasses.replace(pc, fuse_exchange=False))
+    fus = PipeGCN(mc, dataclasses.replace(pc, fuse_exchange=True))
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_fus = fus.init_buffers(topo, dtype=jnp.float64)
+    for t in range(4):
+        key = jax.random.PRNGKey(t)
+        l0, g0, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_fus, _ = fus.train_step(topo, params, b_fus, data, key)
+        assert abs(float(l0) - float(l1)) < 1e-12, t
+        for k in g0:
+            assert float(jnp.abs(g0[k] - g1[k]).max()) < 1e-12, (t, k)
+
+
+def test_single_layer_int4_trains(setup):
+    """L=1 edge case: forward ships one quantized payload, the backward
+    ships nothing — the empty fused grad flush must not trace a collective
+    of zero operands or crash."""
+    ds, topo, data = setup
+    mc, pc = _pair(ds, num_layers=1, wire="int4", fuse_exchange=True)
+    model = PipeGCN(mc, pc)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = model.init_buffers(topo, dtype=jnp.float64)
+    loss, grads, bufs, _ = model.train_step(topo, params, bufs, data,
+                                            jax.random.PRNGKey(0))
+    assert np.isfinite(float(loss)) and grads
+
+
+def _model(pipeline, num_layers=3, **pipe_kw):
+    pipe_kw = dict(pipe_kw)
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=16, num_layers=num_layers,
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0,
+                     matmul_order=pipe_kw.pop("matmul_order",
+                                              "aggregate-first"))
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return PipeGCN(mc, pc)
+
+
+@pytest.mark.parametrize("pipe_kw", [
+    {"wire": "int8"},
+    {"wire": "int4", "staleness_steps": 2},
+    {"wire": "auto"},
+    {"wire": "int8", "slice_boundary": True,
+     "matmul_order": "transform-first", "overlap": "none"},
+])
+def test_codecs_preserve_collective_counts(tiny_pipeline, pipe_kw):
+    """Codecs/slicing change bytes per collective, never the number of
+    collectives: fused stays 1 fwd + 1 bwd, per-layer stays 2L-1."""
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    fus = _model(tiny_pipeline, fuse_exchange=True, **pipe_kw)
+    got = traced_step_collectives(fus, mesh, tiny_pipeline.topo,
+                                  tiny_pipeline.train_data, train=True)
+    assert got["all_to_all"] == 2, (pipe_kw, got)
+    per = _model(tiny_pipeline, fuse_exchange=False, **pipe_kw)
+    got = traced_step_collectives(per, mesh, tiny_pipeline.topo,
+                                  tiny_pipeline.train_data, train=True)
+    assert got["all_to_all"] == 5, (pipe_kw, got)
+
+
+# ----------------------------------------------------------------------
+# 4. traced bytes-on-wire
+# ----------------------------------------------------------------------
+
+def _analytic_row_bytes(model, topo):
+    """Bytes one boundary row costs per train step: every layer forward +
+    every trained layer > 0 backward, at that layer's payload width."""
+    pw = model.payload_widths(topo)
+    wires = [c.name for c in model.wire_codecs(topo)]
+    blk = model.pipe.wire_block
+    fwd = sum(wire_bytes_per_row(w, f, blk) for w, f in zip(wires, pw))
+    bwd = sum(wire_bytes_per_row(w, f, blk)
+              for w, f in list(zip(wires, pw))[1:])
+    return fwd + bwd
+
+
+@pytest.mark.parametrize("pipe_kw", [
+    {"wire": "bf16"},
+    {"wire": "int8"},
+    {"wire": "int4"},
+    {"wire": "int8", "wire_block": 8},
+    {"wire": "auto"},
+    {"wire": "int8", "slice_boundary": True,
+     "matmul_order": "transform-first", "overlap": "none"},
+])
+def test_traced_wire_bytes_match_formula(tiny_pipeline, pipe_kw):
+    """The traced all_to_all bytes of a fused train step factor exactly as
+    (boundary rows) x (analytic per-row bytes) — the row count calibrated
+    once from the f32 trace, so the check pins the codec byte math without
+    assuming the exchange layout."""
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    topo = tiny_pipeline.topo
+    base = _model(tiny_pipeline, fuse_exchange=True)
+    got_f32 = traced_step_wire_bytes(base, mesh, topo,
+                                     tiny_pipeline.train_data)
+    rows = got_f32 / _analytic_row_bytes(base, topo)
+    assert rows == int(rows) and rows > 0, rows
+    model = _model(tiny_pipeline, fuse_exchange=True, **pipe_kw)
+    got = traced_step_wire_bytes(model, mesh, topo, tiny_pipeline.train_data)
+    assert got == rows * _analytic_row_bytes(model, topo), pipe_kw
+    assert got < got_f32
+
+
+def test_traced_wire_bytes_ratios(tiny_pipeline):
+    """Headline ratios on the tier-1 graph (every payload 16 wide): bf16
+    is exactly half of f32, int8 exactly 20/64 (16 value bytes + one
+    4-byte scale block per row vs 64 f32 bytes), int4 exactly 12/64. The
+    reddit-sim acceptance bars (int8 <= 0.27x, int4 <= 0.15x, at widths
+    128-256 where the scale region amortizes) are gated in
+    benchmarks/bench_comm_ratio.py."""
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    topo = tiny_pipeline.topo
+    got = {w: traced_step_wire_bytes(
+        _model(tiny_pipeline, fuse_exchange=True, wire=w),
+        mesh, topo, tiny_pipeline.train_data)
+        for w in ("f32", "bf16", "int8", "int4")}
+    assert got["bf16"] * 2 == got["f32"]
+    assert got["int8"] * 64 == got["f32"] * 20, got
+    assert got["int4"] * 64 == got["f32"] * 12, got
+
+
+# ----------------------------------------------------------------------
+# 5. convergence
+# ----------------------------------------------------------------------
+
+def test_int8_wire_convergence_smoke(tiny_pipeline):
+    """Tier-1: the int8 wire trains the staleness-smoke model to the same
+    bar as the f32 wire (the slow tier sweeps int4 x staleness depths)."""
+    from repro.core import train_pipegcn
+    mc = ModelConfig(kind="sage", feat_dim=tiny_pipeline.dataset.feat_dim,
+                     hidden=32, num_layers=2,
+                     num_classes=tiny_pipeline.dataset.num_classes,
+                     dropout=0.0)
+    pc = dataclasses.replace(PipeConfig(stale=True), wire="int8",
+                             fuse_exchange=True)
+    res = train_pipegcn(tiny_pipeline, mc, pc, epochs=40, lr=0.01,
+                        eval_every=40)
+    assert res.final_metrics["test"] > 0.8, res.final_metrics
+    hist = res.history["loss"]
+    assert hist[-1] < hist[0] * 0.5, hist
+
+
+@pytest.mark.slow
+def test_quantized_accuracy_delta():
+    """Slow tier: 120-epoch accuracy deltas vs the f32 wire stay within
+    the issue bounds (int8 and the int8 x staleness cell <= 0.1 absolute,
+    int4 <= 0.2)."""
+    from repro.core import train_pipegcn
+    from repro.data import GraphDataPipeline
+    pipeline = GraphDataPipeline.build("tiny", num_parts=4, kind="sage")
+    mc = ModelConfig(kind="sage", feat_dim=pipeline.dataset.feat_dim,
+                     hidden=32, num_layers=2,
+                     num_classes=pipeline.dataset.num_classes, dropout=0.0)
+
+    def acc(**pipe_kw):
+        pc = dataclasses.replace(PipeConfig(stale=True), fuse_exchange=True,
+                                 **pipe_kw)
+        res = train_pipegcn(pipeline, mc, pc, epochs=120, lr=0.01,
+                            eval_every=120)
+        return res.final_metrics["test"]
+
+    ref = acc(wire="f32")
+    assert ref > 0.9, ref
+    assert abs(acc(wire="int8") - ref) <= 0.1
+    assert abs(acc(wire="int8", staleness_steps=2) - ref) <= 0.1
+    assert abs(acc(wire="int4") - ref) <= 0.2

@@ -52,6 +52,13 @@ CELLS = [
     ("pipegcn", "coo", {"compress_boundary": True}),
     ("pipegcn-gf", "coo", {"compress_boundary": True}),
     ("pipegcn", "coo", {"staleness_steps": 2, "compress_boundary": True}),
+    # quantized wires: encode runs before the exchange on both schedules,
+    # so the 1e-12 parity bar is unchanged (see repro/core/codec.py)
+    ("pipegcn", "coo", {"wire": "int8"}),
+    ("pipegcn", "blocksparse", {"wire": "int4"}),
+    ("pipegcn-gf", "coo", {"wire": "int8"}),
+    ("pipegcn", "coo", {"wire": "int8", "staleness_steps": 2}),
+    ("pipegcn", "coo", {"wire": "auto"}),
 ]
 
 

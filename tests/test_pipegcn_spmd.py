@@ -95,6 +95,23 @@ EXTRA = [
     ("pipegcn", "fused", 4, {"matmul_order": "auto"}, "1d"),
     ("vanilla", "fused", 2, {"matmul_order": "auto"}, "1d"),
     ("pipegcn", "fused", 2, {}, "2d"),
+    # quantized boundary wires (ISSUE 8): int8/int4 blockwise codecs under
+    # shard_map, crossed with staleness depth, the fused schedule, the
+    # fused engine, n_local>1, and EMA smoothing. Encode/decode run
+    # outside the collective on both backends, so parity stays 1e-12.
+    ("pipegcn", "coo", 2, {"wire": "int8"}, "1d"),
+    ("pipegcn", "coo", 2, {"wire": "int8", "staleness_steps": 2}, "1d"),
+    ("pipegcn", "blocksparse", 4,
+     {"wire": "int4", "staleness_steps": 3}, "1d"),
+    ("pipegcn-gf", "coo", 1, {"wire": "int4"}, "1d"),
+    ("pipegcn", "fused", 2, {"wire": "int8", "fuse_exchange": True}, "1d"),
+    # boundary feature slicing (ISSUE 8): post-transform-width payloads,
+    # alone and co-decided with wire="auto" via the cost model
+    ("pipegcn", "coo", 2,
+     {"slice_boundary": True, "matmul_order": "transform-first"}, "1d"),
+    ("pipegcn", "coo", 2,
+     {"slice_boundary": True, "matmul_order": "auto", "wire": "auto",
+      "fuse_exchange": True}, "1d"),
 ]
 # Cross-layout cells: rcm-reordered SPMD model vs natural-layout sim
 # reference — the full variants × engines × n_local product, so node
