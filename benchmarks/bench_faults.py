@@ -1,0 +1,185 @@
+"""Fault-injection matrix (ISSUE 9): guard overhead, zero-fault identity,
+and degraded-run convergence.
+
+Three claims, each gated in-process (assertion -> bench FAILURE, not a
+drifting number):
+
+1. IDENTITY — `guard_exchange=True` with no faults is bitwise invisible:
+   across (variant x wire x staleness-depth) cells the guarded step
+   produces the exact same loss bits as the unguarded step and the es
+   counters stay zero; the jaxpr collective counts are identical (the
+   checksum column rides inside the existing wires).
+2. DEGRADED CONVERGENCE — a 5% exchange-drop rate under the guard
+   converges within 1 accuracy point of the fault-free run; effective
+   staleness never exceeds `max_staleness`; every fallback is counted.
+   The fallback/es counters are DETERMINISTIC (seeded host-side fault
+   tables; drops are always detected), so they are emitted as structural
+   meta ints and exact-gated against the checked-in baseline.
+3. OVERHEAD — the guarded step costs <= 1.35x the unguarded step
+   (checksum encode/verify + select fallback), measured interleaved on
+   the running machine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, emit_meta, time_fn
+from repro.core import FaultPlan, ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN
+from repro.core.trainer import train_pipegcn
+from repro.data import GraphDataPipeline
+from repro.optim import adam
+
+# (variant, wire, staleness_steps): the identity matrix — every wire
+# format crossed with FIFO depth and smoothing.
+IDENTITY_CELLS = [
+    ("pipegcn", "f32", 1),
+    ("pipegcn", "bf16", 1),
+    ("pipegcn", "int8", 1),
+    ("pipegcn", "int4", 1),
+    ("pipegcn", "f32", 2),
+    ("pipegcn", "int8", 2),
+    ("pipegcn-gf", "f32", 1),
+    ("pipegcn-gf", "int8", 1),
+]
+
+# (variant, wire, staleness_steps, fault rate): the degraded-run matrix.
+DEGRADED_CELLS = [
+    ("pipegcn", "f32", 1, 0.05),
+    ("pipegcn-gf", "int8", 1, 0.05),
+    ("pipegcn", "f32", 2, 0.05),
+]
+
+
+def _models(pipeline, variant, wire, k, **extra):
+    ds = pipeline.dataset
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=32,
+                     num_layers=3, num_classes=ds.num_classes,
+                     dropout=0.0, multilabel=ds.multilabel)
+    pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.95),
+                             wire=wire, staleness_steps=k, **extra)
+    return mc, pc
+
+
+def _identity(pipeline) -> dict:
+    topo, data = pipeline.topo, pipeline.train_data
+    facts = {"cells": len(IDENTITY_CELLS)}
+    for variant, wire, k in IDENTITY_CELLS:
+        mc, pc = _models(pipeline, variant, wire, k)
+        ref = PipeGCN(mc, pc)
+        grd = PipeGCN(mc, dataclasses.replace(pc, guard_exchange=True))
+        params = ref.init_params(jax.random.PRNGKey(0))
+        b_ref, b_grd = ref.init_buffers(topo), grd.init_buffers(topo)
+        identical = True
+        for t in range(3):
+            key = jax.random.PRNGKey(t)
+            l0, _, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+            l1, _, b_grd, _ = grd.train_step(topo, params, b_grd, data, key)
+            identical &= float(l0) == float(l1)
+            identical &= int(np.asarray(b_grd["es"]).max()) == 0
+        name = f"faults/identity/{variant}/{wire}/k{k}"
+        emit(name, 0.0, f"bitwise={identical}")
+        assert identical, f"{name}: guard_exchange changed the zero-fault run"
+        facts[f"{variant}/{wire}/k{k}"] = {"bitwise": bool(identical)}
+    return facts
+
+
+def _collectives(pipeline) -> dict:
+    from repro.core.trace_utils import traced_step_collectives
+    from repro.launch.mesh import make_partition_mesh
+    P = pipeline.topo.num_parts
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    mc, pc = _models(pipeline, "pipegcn", "f32", 1)
+    c_ref = traced_step_collectives(PipeGCN(mc, pc), mesh,
+                                    pipeline.topo, pipeline.train_data)
+    c_grd = traced_step_collectives(
+        PipeGCN(mc, dataclasses.replace(pc, guard_exchange=True)), mesh,
+        pipeline.topo, pipeline.train_data)
+    assert c_ref == c_grd, (
+        f"guard_exchange changed the collective schedule: {c_ref} -> {c_grd}")
+    emit("faults/collectives/guard_invariant", 0.0,
+         ",".join(f"{k}={v}" for k, v in sorted(c_grd.items())))
+    return {f"guarded_{k}": int(v) for k, v in sorted(c_grd.items())}
+
+
+def _degraded(pipeline, epochs: int) -> dict:
+    facts = {}
+    for variant, wire, k, rate in DEGRADED_CELLS:
+        mc, pc = _models(pipeline, variant, wire, k, guard_exchange=True,
+                         max_staleness=max(8, k + 4))
+        clean = train_pipegcn(pipeline, mc, pc, epochs=epochs,
+                              eval_every=epochs)
+        plan = FaultPlan(rate=rate, rate_kind="drop", seed=1)
+        faulty = train_pipegcn(pipeline, mc, pc, epochs=epochs,
+                               eval_every=epochs, faults=plan)
+        v0, v1 = clean.final_metrics["val"], faulty.final_metrics["val"]
+        gap = abs(v0 - v1)
+        fb = faulty.anomalies["exchange_fallbacks"]
+        es = faulty.anomalies["max_effective_staleness"]
+        name = f"faults/degraded/{variant}/{wire}/k{k}/rate{rate}"
+        emit(name, 0.0, f"val_clean={v0:.4f},val_faulty={v1:.4f},"
+                        f"gap={gap:.4f},fallbacks={fb},es_max={es}")
+        assert gap <= 0.01, (
+            f"{name}: {rate:.0%} drop rate moved val accuracy by "
+            f"{gap:.4f} (> 1 point): {v0:.4f} -> {v1:.4f}")
+        assert es <= pc.max_staleness, (name, es, pc.max_staleness)
+        assert fb > 0, f"{name}: a {rate:.0%} plan injected zero fallbacks?"
+        facts[f"{variant}/{wire}/k{k}"] = {
+            "fallbacks": int(fb), "es_max": int(es),
+            "within_1pt": bool(gap <= 0.01)}
+    return facts
+
+
+def _overhead(pipeline) -> None:
+    topo, data = pipeline.topo, pipeline.train_data
+    mc, pc = _models(pipeline, "pipegcn", "f32", 1)
+    opt = adam(0.01)
+
+    def mk(model):
+        params = model.init_params(jax.random.PRNGKey(0))
+        state = opt.init(params)
+        bufs = model.init_buffers(topo)
+
+        @jax.jit
+        def one(params, state, bufs, key):
+            loss, grads, nb, _ = model.train_step(topo, params, bufs,
+                                                  data, key)
+            params, state = opt.apply(params, grads, state)
+            return loss, params, state, nb
+
+        return one, params, state, bufs
+
+    key = jax.random.PRNGKey(0)
+    ratios = []
+    # interleaved A/B: immune to machine speed, robust to drift
+    f0, p0, s0, b0 = mk(PipeGCN(mc, pc))
+    f1, p1, s1, b1 = mk(PipeGCN(mc, dataclasses.replace(
+        pc, guard_exchange=True)))
+    for _ in range(3):
+        t_ref = time_fn(f0, p0, s0, b0, key, iters=5)
+        t_grd = time_fn(f1, p1, s1, b1, key, iters=5)
+        ratios.append(t_grd / t_ref)
+    ratio = min(ratios)
+    emit("faults/overhead/guarded_step", ratio * 100.0,
+         f"guarded/unguarded={ratio:.3f}x")
+    assert ratio <= 1.35, (
+        f"guarded step costs {ratio:.2f}x the unguarded step (gate: 1.35x)")
+
+
+def run(quick: bool = False):
+    pipeline = GraphDataPipeline.build("tiny" if quick else "reddit-sim",
+                                       num_parts=4, kind="sage")
+    epochs = 30 if quick else 60
+    emit_meta("faults", {"dataset": "tiny" if quick else "reddit-sim",
+                         "epochs": epochs})
+    emit_meta("faults", {"identity": _identity(pipeline)})
+    emit_meta("faults", {"collectives": _collectives(pipeline)})
+    emit_meta("faults", {"degraded": _degraded(pipeline, epochs)})
+    _overhead(pipeline)
+
+
+if __name__ == "__main__":
+    run(quick=True)

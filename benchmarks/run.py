@@ -78,7 +78,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: comm_ratio,throughput,accuracy,error,"
-                         "gamma,scale,breakdown,rate,kernels,roofline")
+                         "gamma,scale,breakdown,rate,kernels,roofline,faults")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the emitted rows + structured metadata "
                          "(per-step collective counts) as a JSON artifact "
@@ -93,9 +93,9 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_accuracy, bench_breakdown, bench_comm_ratio,
-                            bench_convergence, bench_error, bench_gamma,
-                            bench_kernels, bench_rate, bench_scale,
-                            bench_throughput, roofline)
+                            bench_convergence, bench_error, bench_faults,
+                            bench_gamma, bench_kernels, bench_rate,
+                            bench_scale, bench_throughput, roofline)
     table = {
         "comm_ratio": bench_comm_ratio.run,      # Tab. 2
         "throughput": bench_throughput.run,      # Fig. 3 / Tab. 4 (thpt)
@@ -108,6 +108,7 @@ def main() -> None:
         "rate": bench_rate.run,                  # Thm. 3.1 / Cor. A.10
         "kernels": bench_kernels.run,            # Pallas kernels
         "roofline": roofline.run,                # §Roofline from dry-run
+        "faults": bench_faults.run,              # ISSUE 9 fault tolerance
     }
     from benchmarks import common
     common.reset_records()

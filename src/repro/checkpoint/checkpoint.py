@@ -8,12 +8,23 @@ Works for any pytree (params, optimizer state, PipeGCN pipeline buffers).
 Sharded arrays are gathered to host before save (fine at the scales this
 container runs); the manifest records the logical PartitionSpec so a restore
 on a different mesh can re-shard.
+
+Saves are ATOMIC: everything is written and fsynced into a `step_<N>.tmp`
+staging directory, which is `os.replace`d onto the final name only once
+complete — a crash mid-save can never leave a truncated `arrays.npz` under
+a name `latest_step` would pick (the `step_(\\d+)` match rejects `.tmp`).
+
+Restores VALIDATE: the stored treedef string and every leaf's manifest
+dtype are compared against the template, and a mismatch error names the
+first offending leaf path — restoring yesterday's run into today's
+refactored state must fail loudly, not reinterpret bytes.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
 
 import jax
 import numpy as np
@@ -26,10 +37,38 @@ def _spec_of(x) -> str:
         return ""
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, overwrite: bool = True) -> str:
+def _fsync_dir_tree(path: str) -> None:
+    """fsync every file under `path`, then the directory itself, so the
+    subsequent rename publishes fully durable contents."""
+    for name in os.listdir(path):
+        fd = os.open(os.path.join(path, name), os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _leaf_paths(tree) -> list[str]:
+    """Human-readable path string per leaf, in flatten order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree,
+                    overwrite: bool = True) -> str:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    tmp = path + ".tmp"
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if os.path.isdir(tmp):            # leftover from a crashed save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     leaves, treedef = jax.tree.flatten(tree)
+    paths = _leaf_paths(tree)
     arrays = {}
     manifest = {"treedef": str(treedef), "num_leaves": len(leaves),
                 "step": step, "leaves": []}
@@ -40,11 +79,25 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, overwrite: bool = True) -> s
             arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
         arrays[f"leaf_{i}"] = arr
         manifest["leaves"].append({
-            "index": i, "shape": list(arr.shape), "dtype": dtype_str,
-            "spec": _spec_of(leaf)})
-    np.savez_compressed(os.path.join(path, "arrays.npz"), **arrays)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+            "index": i, "path": paths[i], "shape": list(arr.shape),
+            "dtype": dtype_str, "spec": _spec_of(leaf)})
+    np.savez_compressed(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    # durability before visibility: fsync the staged files, atomically
+    # swap the directory into place, then fsync the parent so the rename
+    # itself survives a crash
+    _fsync_dir_tree(tmp)
+    if os.path.isdir(path):
+        if not overwrite:
+            raise FileExistsError(f"checkpoint exists: {path}")
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    fd = os.open(ckpt_dir, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
     return path
 
 
@@ -57,7 +110,12 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore_checkpoint(ckpt_dir: str, step: int | None, like):
-    """Restore into the structure of `like` (a template pytree)."""
+    """Restore into the structure of `like` (a template pytree).
+
+    The template must MATCH the saved state: same treedef (string
+    compare), same per-leaf shape, and — when the manifest carries real
+    dtypes (every checkpoint written by this module) — same dtype per
+    leaf. Errors name the first mismatching leaf path."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -71,6 +129,12 @@ def restore_checkpoint(ckpt_dir: str, step: int | None, like):
         raise ValueError(
             f"checkpoint has {manifest['num_leaves']} leaves, template has "
             f"{len(leaves_like)}")
+    if manifest["treedef"] != str(treedef):
+        raise ValueError(
+            "checkpoint treedef does not match the template structure:\n"
+            f"  saved:    {manifest['treedef']}\n"
+            f"  template: {treedef}")
+    paths = _leaf_paths(like)
     import ml_dtypes  # noqa: F401 — registers bf16 etc. with numpy
     out = []
     for i, tmpl in enumerate(leaves_like):
@@ -79,6 +143,14 @@ def restore_checkpoint(ckpt_dir: str, step: int | None, like):
         if arr.dtype != want_dtype and arr.dtype.kind == "u":
             arr = arr.view(want_dtype)
         if tuple(arr.shape) != tuple(np.shape(tmpl)):
-            raise ValueError(f"leaf {i}: shape {arr.shape} != {np.shape(tmpl)}")
-        out.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+            raise ValueError(
+                f"leaf {paths[i]}: checkpoint shape {tuple(arr.shape)} != "
+                f"template shape {tuple(np.shape(tmpl))}")
+        tmpl_dtype = np.dtype(getattr(tmpl, "dtype", np.asarray(tmpl).dtype))
+        if want_dtype != tmpl_dtype:
+            raise ValueError(
+                f"leaf {paths[i]}: checkpoint dtype {want_dtype} != "
+                f"template dtype {tmpl_dtype} — restore into the state "
+                "layout the checkpoint was saved from")
+        out.append(jax.numpy.asarray(arr, dtype=tmpl_dtype))
     return treedef.unflatten(out)

@@ -1,5 +1,9 @@
 """PipeGCN core: the paper's contribution as a composable JAX module."""
 from repro.core.config import ModelConfig, PipeConfig
+from repro.core.faults import (FaultPlan, FaultSite, FaultTables,
+                               StalenessExceededError)
+from repro.core.health import (HealthConfig, TrainingAnomalyError,
+                               health_check)
 from repro.core.pipegcn import (PipeGCN, ShardedData, Topology,
                                 SimBackend, SpmdBackend,
                                 shard_data, topology_from)
@@ -10,4 +14,6 @@ from repro.core.trainer import (TrainResult, make_jitted_train_step,
 __all__ = ["ModelConfig", "PipeConfig", "PipeGCN", "ShardedData", "Topology",
            "SimBackend", "SpmdBackend", "shard_data", "topology_from",
            "TrainResult", "make_jitted_train_step", "make_spmd_train_step",
-           "train_pipegcn", "make_pipegcn_loss"]
+           "train_pipegcn", "make_pipegcn_loss",
+           "FaultPlan", "FaultSite", "FaultTables", "StalenessExceededError",
+           "HealthConfig", "TrainingAnomalyError", "health_check"]

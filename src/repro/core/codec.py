@@ -192,17 +192,99 @@ class QuantCodec:
         return (q.astype(dtype) * sfull.astype(dtype))
 
 
-def make_codec(wire: str, block: int = WIRE_BLOCK):
-    """The codec instance for one resolved wire-format name."""
+def row_checksum(wire):
+    """Per-row checksum of a wire array: sum of the row's bytes mod 256.
+
+    Computed over the exact bytes on the wire (floats are bitcast, not
+    rounded), so any single flipped bit — and almost any burst of flips —
+    changes the value. Returns an int32 array of shape ``wire.shape[:-1]``.
+    """
+    if wire.dtype == jnp.uint8:
+        return jnp.sum(wire.astype(jnp.int32), axis=-1) % 256
+    b = jax.lax.bitcast_convert_type(wire, jnp.uint8)   # (..., F, itemsize)
+    return jnp.sum(b.astype(jnp.int32), axis=(-2, -1)) % 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ChecksumCodec:
+    """Guard wrapper (``PipeConfig.guard_exchange``): any inner codec plus
+    ONE trailing checksum column per wire row.
+
+    The column stores ``row_checksum`` of the inner wire row as a small
+    integer VALUE (0..255) in the wire's own dtype — exactly representable
+    in uint8, bfloat16, f32 and f64, so it survives the fused pack's float
+    promotion bit-exactly (`decode_checked` casts the row back to the inner
+    wire dtype before re-summing). Riding inside the wire array keeps the
+    exchange a pure permutation: no extra collective, no side channel.
+
+    ``name`` forwards the inner codec's (the step's dtype dispatch keys off
+    it); widths/bytes grow by the one column.
+    """
+
+    inner: NativeCodec | Bf16Codec | QuantCodec
+
+    @property
+    def name(self) -> str:
+        """The wrapped codec's wire-format name (the guard is orthogonal)."""
+        return self.inner.name
+
+    def wire_width(self, f: int) -> int:
+        """Inner wire columns plus the checksum column."""
+        return self.inner.wire_width(f) + 1
+
+    def wire_bytes(self, f: int) -> float:
+        """Inner wire bytes plus one column in the wire dtype."""
+        extra = 1.0 if isinstance(self.inner, QuantCodec) else \
+            self.inner.wire_bytes(1)
+        return self.inner.wire_bytes(f) + extra
+
+    def _wire_dtype(self, dtype):
+        """The inner codec's on-wire dtype (to undo pack promotion)."""
+        if isinstance(self.inner, QuantCodec):
+            return jnp.uint8
+        if isinstance(self.inner, Bf16Codec):
+            return jnp.bfloat16
+        return dtype
+
+    def encode(self, x):
+        """Inner-encode, then append the per-row checksum column."""
+        wire = self.inner.encode(x)
+        c = row_checksum(wire).astype(wire.dtype)
+        return jnp.concatenate([wire, c[..., None]], axis=-1)
+
+    def decode(self, wire, f: int, dtype):
+        """Strip the checksum column and inner-decode (no verification —
+        use ``decode_checked`` on the receive path)."""
+        pc = self.inner.wire_width(f)
+        inner_wire = wire[..., :pc].astype(self._wire_dtype(dtype))
+        return self.inner.decode(inner_wire, f, dtype)
+
+    def decode_checked(self, wire, f: int, dtype):
+        """Decode AND verify: returns ``(payload, valid)`` where ``valid``
+        is a per-row bool of shape ``wire.shape[:-1]`` — True iff the
+        recomputed checksum matches the stored column (a corrupted stored
+        column, including NaN, also reads as invalid)."""
+        pc = self.inner.wire_width(f)
+        inner_wire = wire[..., :pc].astype(self._wire_dtype(dtype))
+        stored = wire[..., pc]
+        valid = stored == row_checksum(inner_wire).astype(wire.dtype)
+        return self.inner.decode(inner_wire, f, dtype), valid
+
+
+def make_codec(wire: str, block: int = WIRE_BLOCK, guard: bool = False):
+    """The codec instance for one resolved wire-format name; ``guard=True``
+    wraps it in a :class:`ChecksumCodec` (one extra column per row)."""
     if wire == "f32":
-        return NativeCodec()
-    if wire == "bf16":
-        return Bf16Codec()
-    if wire == "int8":
-        return QuantCodec(bits=8, block=block)
-    if wire == "int4":
-        return QuantCodec(bits=4, block=block)
-    raise ValueError(f"unknown wire format {wire!r}; have {WIRE_FORMATS}")
+        codec = NativeCodec()
+    elif wire == "bf16":
+        codec = Bf16Codec()
+    elif wire == "int8":
+        codec = QuantCodec(bits=8, block=block)
+    elif wire == "int4":
+        codec = QuantCodec(bits=4, block=block)
+    else:
+        raise ValueError(f"unknown wire format {wire!r}; have {WIRE_FORMATS}")
+    return ChecksumCodec(codec) if guard else codec
 
 
 # ----------------------------------------------------------------------

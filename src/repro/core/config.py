@@ -122,6 +122,22 @@ class PipeConfig:
     # schedule; it only repositions each collective between the two
     # phases (collective COUNTS are unchanged in every mode).
     overlap: str = "auto"
+    # Guarded exchange (ISSUE 9): append a per-row checksum column to every
+    # wire payload (docs/wire-format.md §2.2) and verify it on decode. A
+    # row that fails verification is treated as lost: the receiver falls
+    # back to its last-good stale entry, so the payload's EFFECTIVE
+    # staleness grows by one. Buffers gain an "es" counter leaf tracking
+    # consecutive fallbacks per (partition, direction, layer, peer); the
+    # trainer raises faults.StalenessExceededError once
+    # staleness_steps + max(es) exceeds `max_staleness`. With no faults
+    # injected the guard is bitwise invisible (select semantics) and adds
+    # no collectives. Requires stale=True — vanilla mode has no stale
+    # buffer to fall back to.
+    guard_exchange: bool = False
+    # Bound on the effective staleness the guarded run tolerates before
+    # dying loudly (PipeGCN's convergence proof assumes bounded staleness;
+    # unbounded fallback would silently void it).
+    max_staleness: int = 8
 
     OVERLAPS = ("auto", "none", "split-phase")
     WIRES = ("f32", "bf16", "int8", "int4", "auto")
@@ -142,6 +158,23 @@ class PipeConfig:
                 raise ValueError(
                     "compress_boundary is a deprecated alias for wire='bf16' "
                     f"and conflicts with wire={self.wire!r}")
+        if self.guard_exchange:
+            if not self.stale:
+                raise ValueError(
+                    "guard_exchange requires stale=True: vanilla mode has "
+                    "no stale buffer to fall back to when a payload fails "
+                    "its checksum")
+            if self.overlap == "split-phase":
+                raise ValueError(
+                    "guard_exchange is incompatible with overlap="
+                    "'split-phase' (the split schedule lands payloads "
+                    "mid-phase, before the checksum verdict exists); use "
+                    "overlap='auto'/'none'")
+            if self.max_staleness < self.staleness_steps:
+                raise ValueError(
+                    f"max_staleness ({self.max_staleness}) must be >= "
+                    f"staleness_steps ({self.staleness_steps}): the FIFO "
+                    "depth alone already implies that much staleness")
         if self.slice_boundary and self.overlap == "split-phase":
             raise ValueError(
                 "slice_boundary is incompatible with overlap='split-phase' "

@@ -1,0 +1,208 @@
+"""Declarative fault injection for the PipeGCN boundary exchange.
+
+PipeGCN's bounded-staleness theorem makes a lost or corrupted boundary
+exchange recoverable BY DESIGN: the receiver already tolerates payloads
+that are one iteration old, so an invalid payload is just one extra step
+of staleness (up to ``PipeConfig.max_staleness``). This module supplies
+the faults to prove it: a :class:`FaultPlan` declares per-(step, layer,
+direction, partition-pair) drop / corrupt / delay sites, compiles to
+dense boolean tables (:class:`FaultTables`, a pytree traced through the
+jitted step — the same trace handles any plan of the same horizon), and
+:func:`apply_faults` injects them into the encoded wire arrays right
+before the exchange on either backend.
+
+Semantics of the three fault kinds:
+
+``drop``     the payload never arrives: the wire row is zeroed and its
+             checksum column (``guard_exchange``) is set to a value that
+             cannot match, so the receiver flags every row invalid and
+             falls back to its stale buffer. Without the guard the zeros
+             land silently (chaos mode — the health guard's job).
+``corrupt``  seeded pseudo-random XOR bit-flips over the wire bytes
+             (``density`` = per-byte flip probability, each flipped byte
+             XORed with a nonzero mask). Detected by the per-row checksum
+             with probability ~1 - 2^-8 per row; an undetected row decodes
+             to garbage, which is exactly the failure mode the checksum
+             is there to bound.
+``delay``    the payload arrives one step late. Every step re-sends fresh
+             boundary data, so a one-step-late payload is superseded on
+             arrival and the observable effect equals ``drop`` for that
+             step; ``compile`` lowers it accordingly.
+
+The flip streams are keyed by (seed, step, direction, layer, SOURCE
+partition), so the injected bytes are identical across backends and
+device layouts — a degraded sim run and a degraded SPMD run see the same
+faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codec import byteify, unbyteify
+
+#: Direction indices of the fault tables (axis 1).
+FWD, BWD = 0, 1
+
+KINDS = ("drop", "corrupt", "delay")
+DIRECTIONS = ("fwd", "bwd")
+
+
+class StalenessExceededError(RuntimeError):
+    """Effective staleness of some exchange exceeded PipeConfig.max_staleness."""
+
+
+class FaultTables(NamedTuple):
+    """Compiled, trace-compatible fault schedule (a jit-friendly pytree).
+
+    ``drop`` / ``corrupt`` are bool ``(T, 2, L, P_src, P_dst)`` tables
+    indexed by (step, direction, layer, source partition, destination
+    partition); ``key`` seeds the corruption flip streams and ``density``
+    is the per-byte flip probability (a traced f32 scalar). Steps beyond
+    the horizon T are clamped to the last row.
+    """
+
+    drop: jax.Array
+    corrupt: jax.Array
+    key: jax.Array
+    density: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSite:
+    """One declarative fault: drop/corrupt/delay the (src -> dst) payload
+    of ``layer`` in ``direction`` ("fwd"/"bwd") at ``step``."""
+
+    step: int
+    layer: int
+    src: int
+    dst: int
+    direction: str = "fwd"
+    kind: str = "drop"
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"unknown direction {self.direction!r}; "
+                             f"have {DIRECTIONS}")
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"have {KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault schedule: explicit ``sites`` plus an optional
+    i.i.d. background ``rate`` of ``rate_kind`` faults over every
+    (step, direction, layer, src != dst) site, seeded by ``seed``.
+
+    ``density`` is the per-byte bit-flip probability of "corrupt" faults.
+    An empty plan (no sites, rate 0) injects nothing; the trainer then
+    skips compilation entirely so the traced step is byte-identical to a
+    fault-free build.
+    """
+
+    sites: tuple = ()
+    rate: float = 0.0
+    rate_kind: str = "drop"
+    seed: int = 0
+    density: float = 0.02
+
+    def __post_init__(self):
+        if self.rate_kind not in KINDS:
+            raise ValueError(f"unknown rate_kind {self.rate_kind!r}; "
+                             f"have {KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if not 0.0 < self.density <= 1.0:
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
+        object.__setattr__(self, "sites", tuple(self.sites))
+
+    def is_empty(self) -> bool:
+        """True when the plan injects nothing at any step."""
+        return not self.sites and self.rate == 0.0
+
+    def compile(self, num_steps: int, num_layers: int,
+                num_parts: int) -> FaultTables:
+        """Lower the plan to dense boolean tables over a ``num_steps``
+        horizon ("delay" lowers to "drop" — see the module docstring)."""
+        shape = (max(num_steps, 1), 2, num_layers, num_parts, num_parts)
+        drop = np.zeros(shape, bool)
+        corrupt = np.zeros(shape, bool)
+        if self.rate > 0.0:
+            rng = np.random.default_rng(self.seed)
+            mask = rng.random(shape) < self.rate
+            # background faults model the NETWORK: self-pairs never leave
+            # the device, so only src != dst sites are eligible.
+            eye = np.eye(num_parts, dtype=bool)
+            mask &= ~eye[None, None, None]
+            # layer 0 sends no backward gradient (Alg. 1 stops there).
+            mask[:, BWD, 0] = False
+            (corrupt if self.rate_kind == "corrupt" else drop)[:] = mask
+        for s in self.sites:
+            if not (0 <= s.layer < num_layers and 0 <= s.src < num_parts
+                    and 0 <= s.dst < num_parts):
+                raise ValueError(f"fault site out of range: {s}")
+            if 0 <= s.step < num_steps:
+                d = FWD if s.direction == "fwd" else BWD
+                tab = corrupt if s.kind == "corrupt" else drop
+                tab[s.step, d, s.layer, s.src, s.dst] = True
+        return FaultTables(drop=jnp.asarray(drop),
+                           corrupt=jnp.asarray(corrupt),
+                           key=jax.random.PRNGKey(self.seed),
+                           density=jnp.float32(self.density))
+
+
+def _flip_bytes(wire, key, density):
+    """Seeded pseudo-random XOR bit-flips over a wire array's bytes: each
+    byte is flipped with probability ``density``, XORed with a nonzero
+    mask so a selected byte always changes."""
+    b, it, dt = byteify(wire)
+    sel = jax.random.bits(key, b.shape, jnp.uint8)
+    val = jax.random.bits(jax.random.fold_in(key, 1), b.shape, jnp.uint8)
+    thresh = jnp.clip(jnp.round(density * 256.0), 0, 255).astype(jnp.uint8)
+    flip = jnp.where(sel < thresh, val | jnp.uint8(1), jnp.uint8(0))
+    return unbyteify(b ^ flip, it, dt)
+
+
+def _dropped_wire(wire, has_checksum: bool):
+    """What a dropped payload decodes from: all-zero rows, with the
+    checksum column (when the guard is on) set to 1 — the checksum of a
+    zero row is 0, so every dropped row is guaranteed invalid."""
+    z = jnp.zeros_like(wire)
+    if has_checksum and wire.shape[-1]:
+        z = z.at[..., -1].set(jnp.ones((), wire.dtype))
+    return z
+
+
+def apply_faults(wire, tables: FaultTables, step_idx, direction: int,
+                 layer: int, part_ids, has_checksum: bool):
+    """Inject this step's faults into one encoded wire array, sender-side.
+
+    ``wire`` is the encoded send payload with trailing (P_dst, slot, W)
+    axes and an optional leading source axis (sim: all P sources; SPMD
+    n_local > 1: the co-resident sources); ``part_ids`` holds the GLOBAL
+    source partition ids of that leading axis (a scalar for the flat SPMD
+    layout). ``step_idx`` is a traced int32; steps past the table horizon
+    clamp to the last row.
+    """
+    t = jnp.clip(step_idx, 0, tables.drop.shape[0] - 1)
+    drop_full = tables.drop[t, direction, layer]        # (P_src, P_dst)
+    corr_full = tables.corrupt[t, direction, layer]
+    squeeze = jnp.ndim(part_ids) == 0
+    ids = jnp.atleast_1d(part_ids)
+    w = wire[None] if squeeze else wire                 # (S, P_dst, slot, W)
+    drop = jnp.take(drop_full, ids, axis=0)             # (S, P_dst)
+    corr = jnp.take(corr_full, ids, axis=0)
+    base = jax.random.fold_in(jax.random.fold_in(jax.random.fold_in(
+        tables.key, step_idx), direction), layer)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(ids)
+    corrupted = jax.vmap(lambda wi, ki: _flip_bytes(wi, ki, tables.density))(
+        w, keys)
+    out = jnp.where(corr[..., None, None], corrupted, w)
+    out = jnp.where(drop[..., None, None],
+                    _dropped_wire(w, has_checksum), out)
+    return out[0] if squeeze else out

@@ -1,0 +1,85 @@
+"""Numerical health guards for the training loop.
+
+A single non-finite loss or gradient poisons every subsequent step (Adam
+moments, stale boundary buffers, params). :func:`health_check` is a
+jit-compatible verdict on one step's outputs — finite loss, finite
+gradients, finite floating buffers, and an optional global grad-norm
+bound reusing the same norm the optimizer's ``clip_by_global_norm``
+computes — and the trainer's skip-and-rollback policy
+(:func:`repro.core.trainer.make_jitted_train_step` with ``health``)
+selects between the updated and the previous state with a bitwise
+``jnp.where``, so a healthy run is bit-identical to an unguarded one.
+
+Escalation is host-side: :class:`HealthConfig.max_consecutive_anomalies`
+back-to-back skipped steps raise :class:`TrainingAnomalyError` — a run
+that can no longer produce a finite step should die loudly, not spin.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import global_norm
+
+
+class TrainingAnomalyError(RuntimeError):
+    """Too many consecutive non-finite / out-of-bound training steps."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Policy knobs for the trainer's health guard.
+
+    ``grad_norm_limit`` — reject steps whose global grad norm exceeds the
+    bound (``None`` = finiteness only). ``max_consecutive_anomalies`` —
+    consecutive skipped steps before :class:`TrainingAnomalyError`.
+    """
+
+    enabled: bool = True
+    grad_norm_limit: float | None = None
+    max_consecutive_anomalies: int = 25
+
+    def __post_init__(self):
+        if self.grad_norm_limit is not None and self.grad_norm_limit <= 0:
+            raise ValueError("grad_norm_limit must be positive or None, "
+                             f"got {self.grad_norm_limit}")
+        if self.max_consecutive_anomalies < 1:
+            raise ValueError("max_consecutive_anomalies must be >= 1, got "
+                             f"{self.max_consecutive_anomalies}")
+
+
+def _finite_tree(tree) -> jax.Array:
+    """All-finite predicate over a pytree's floating leaves (integer
+    leaves — e.g. the effective-staleness counters — are always fine)."""
+    ok = jnp.bool_(True)
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            ok &= jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def health_check(loss, grads, buffers=None, grad_norm_limit=None):
+    """Jit-compatible health verdict on one training step's outputs.
+
+    Returns ``{"ok": bool[], "grad_norm": f32[]}``. ``ok`` requires a
+    finite loss, finite gradients (a single Inf/NaN leaf drives the
+    global norm non-finite, which the finiteness check catches), finite
+    floating buffer leaves, and — when ``grad_norm_limit`` is set — a
+    global norm at or under the bound.
+    """
+    gn = global_norm(grads)
+    ok = jnp.isfinite(loss) & jnp.isfinite(gn)
+    if buffers is not None:
+        ok &= _finite_tree(buffers)
+    if grad_norm_limit is not None:
+        ok &= gn <= jnp.float32(grad_norm_limit)
+    return {"ok": ok, "grad_norm": gn}
+
+
+def tree_select(pred, on_true, on_false):
+    """Leafwise ``jnp.where`` over matching pytrees — the rollback
+    primitive: bitwise-identity on whichever branch is selected."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b),
+                        on_true, on_false)

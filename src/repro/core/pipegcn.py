@@ -68,6 +68,7 @@ import numpy as np
 
 from repro.core.codec import fused_exchange_encoded, make_codec
 from repro.core.config import ModelConfig, PipeConfig
+from repro.core.faults import BWD, FWD, apply_faults
 from repro.graph.halo import PartitionedGraph, extract_partition_tiles
 from repro.kernels.aggregate import get_engine
 from repro.kernels.gcn_spmm import TILE, SplitSpec
@@ -211,6 +212,15 @@ def _scatter_recv(contrib, send_idx, send_mask, max_inner):
         contrib.reshape(p * slot, f))
 
 
+def _scatter_invalid_rows(inv, send_idx, max_inner):
+    """(P, slot) invalid-contribution mask -> (max_inner,) owner rows whose
+    `_scatter_recv` sum is incomplete (any contributing slot was invalid).
+    Those rows fall back to the stale buffer wholesale — a partial sum is
+    not one-step-stale data, it is wrong data."""
+    return jnp.zeros((max_inner,), bool).at[send_idx.reshape(-1)].max(
+        inv.reshape(-1))
+
+
 # ----------------------------------------------------------------------
 # Hierarchical exchange: P partitions on P // n_local devices.
 #
@@ -342,6 +352,10 @@ class SimBackend(_ExchangeBase):
         # s: (P_dev, P_peer, slot, F); R[i, j] = S[j, i]
         return jnp.swapaxes(s, 0, 1)
 
+    def part_ids(self, num_parts):
+        """Global partition id of every leading-axis slot (all P here)."""
+        return jnp.arange(num_parts)
+
     def psum(self, x):
         return jnp.sum(x, axis=0)
 
@@ -375,6 +389,14 @@ class SpmdBackend(_ExchangeBase):
     def _global_part_offset(self):
         """Global partition id of this device's local partition 0."""
         return jax.lax.axis_index(self.axis_name) * self.n_local
+
+    def part_ids(self, num_parts):
+        """Global partition ids this device sends as: a traced scalar for
+        the flat layout, a (n_local,) vector for co-resident partitions."""
+        base = self._global_part_offset()
+        if not self.lead_axis:
+            return base
+        return base + jnp.arange(self.n_local)
 
     def exchange(self, s):
         # s: (P, slot, F) per device, or (n_local, P, slot, F) when >1
@@ -474,7 +496,12 @@ class PipeGCN:
         Buffer widths follow `payload_widths`: the layer input width fin,
         except for sliced layers (`PipeConfig.slice_boundary`), whose
         exchange — and therefore whose stale state — carries the
-        post-transform width fout."""
+        post-transform width fout.
+
+        Under `guard_exchange` the dict gains an "es" leaf: int32
+        consecutive-fallback counters of shape (2, L, P) per partition —
+        (direction, layer, peer) — with NO staleness-queue axis (the
+        counter tracks the stream, not one queue slot)."""
         p = topo.num_parts
         k = self.pipe.staleness_steps
         q = (k,) if k > 1 else ()
@@ -483,7 +510,12 @@ class PipeGCN:
         for w in self.payload_widths(topo):
             feat.append(jnp.zeros(lead + (topo.halo_size, w), dtype))
             grad.append(jnp.zeros(lead + (topo.max_inner, w), dtype))
-        return {"feat": tuple(feat), "grad": tuple(grad)}
+        out = {"feat": tuple(feat), "grad": tuple(grad)}
+        if self.pipe.guard_exchange:
+            out["es"] = jnp.zeros(
+                ((p,) if leading else ()) + (2, self.model.num_layers, p),
+                jnp.int32)
+        return out
 
     # ---------------- pipeline-buffer semantics ----------------
 
@@ -499,6 +531,24 @@ class PipeGCN:
         if smooth:
             return self.pipe.gamma * buf + (1 - self.pipe.gamma) * fresh
         return fresh
+
+    def _update_buffer_guarded(self, buf, fresh, smooth: bool, valid):
+        """`_update_buffer` with per-row fallback (guard_exchange): rows of
+        `fresh` whose checksum failed keep their previous value — the FIFO
+        re-pushes the newest entry, EMA/replace keep the old row — so a lost
+        payload is one extra step of staleness, not a zero/garbage write.
+        `valid=None` (guard off) and all-True masks are bitwise identical
+        to the unguarded update (pure `jnp.where` select semantics)."""
+        if valid is None:
+            return self._update_buffer(buf, fresh, smooth)
+        v = valid[..., None]
+        if self.pipe.staleness_steps > 1:
+            pushed = jnp.where(v, fresh, buf[-1])
+            return jnp.concatenate([buf[1:], pushed[None]], axis=0)
+        if smooth:
+            upd = self.pipe.gamma * buf + (1 - self.pipe.gamma) * fresh
+            return jnp.where(v, upd, buf)
+        return jnp.where(v, fresh, buf)
 
     # ---------------- shared layer math ----------------
 
@@ -533,9 +583,11 @@ class PipeGCN:
         split: the sliced send only exists after the dense transform, so
         there is no boundary-first phase to overlap (the explicit
         "split-phase" + slice_boundary combination is already rejected by
-        PipeConfig)."""
+        PipeConfig). The guarded exchange also disables the split: the
+        split body has no validity-mask path (and PipeConfig rejects the
+        explicit combination)."""
         if (self.pipe.overlap == "none" or self.split is None
-                or self.pipe.slice_boundary):
+                or self.pipe.slice_boundary or self.pipe.guard_exchange):
             return None
         if self.pipe.overlap == "split-phase":
             return self.split
@@ -592,14 +644,19 @@ class PipeGCN:
         """Per-layer boundary codec (repro.core.codec) the step encodes
         with. A concrete `PipeConfig.wire` applies uniformly; "auto" picks
         per layer by wire bytes over the payload widths
-        (repro.analysis.cost.choose_wire_formats — int4 is explicit-only)."""
+        (repro.analysis.cost.choose_wire_formats — int4 is explicit-only).
+        Under `guard_exchange` every codec is wrapped in a ChecksumCodec
+        (one extra wire column per row, verified on decode)."""
         L = self.model.num_layers
+        g = self.pipe.guard_exchange
         if self.pipe.wire != "auto":
-            return (make_codec(self.pipe.wire, self.pipe.wire_block),) * L
+            return (make_codec(self.pipe.wire, self.pipe.wire_block,
+                               guard=g),) * L
         from repro.analysis.cost import choose_wire_formats
         fmts = choose_wire_formats(self.payload_widths(topo),
                                    block=self.pipe.wire_block)
-        return tuple(make_codec(f, self.pipe.wire_block) for f in fmts)
+        return tuple(make_codec(f, self.pipe.wire_block, guard=g)
+                     for f in fmts)
 
     def _base_orders(self, topo: Topology, train: bool = True,
                      fused: bool | None = None) -> tuple[str, ...]:
@@ -740,12 +797,20 @@ class PipeGCN:
     # ---------------- forward/backward step (per partition view) --------
 
     def _step_impl(self, backend, topo: Topology, params, buffers, data,
-                   key, train: bool):
+                   key, train: bool, step_idx=None, faults=None):
         """Runs per-partition under `backend`. In sim the arrays keep their
         leading partition axis and per-partition ops are vmapped; in spmd this
-        body executes inside shard_map with squeezed arrays."""
+        body executes inside shard_map with squeezed arrays.
+
+        `faults` (a compiled FaultTables) injects drop/corrupt faults into
+        the encoded wires at `step_idx`; under `pipe.guard_exchange` the
+        decode verifies per-row checksums and failed rows fall back to
+        their stale buffer entry (see faults.py / _update_buffer_guarded).
+        `faults=None` traces exactly the historical fault-free step."""
         sp = self._split_active()
-        if sp is not None:
+        if sp is not None and faults is None:
+            # the split schedule has no injection points; numerics are
+            # identical, so a faulted run just takes the unsplit body
             return self._step_impl_split(backend, topo, params, buffers,
                                          data, key, train, sp)
         L = self.model.num_layers
@@ -760,9 +825,19 @@ class PipeGCN:
         if lead:
             gather = jax.vmap(_gather_send)
             scatter = jax.vmap(partial(_scatter_recv, max_inner=max_inner))
+            scatter_inv = jax.vmap(
+                partial(_scatter_invalid_rows, max_inner=max_inner))
         else:
             gather = _gather_send
             scatter = partial(_scatter_recv, max_inner=max_inner)
+            scatter_inv = partial(_scatter_invalid_rows, max_inner=max_inner)
+
+        guard = pipe.guard_exchange
+        pids = backend.part_ids(P) if faults is not None else None
+        # per-layer peer-validity verdicts (guard only): bool (..., P) per
+        # direction, folded into the "es" consecutive-fallback counters
+        feat_pv = [None] * L
+        grad_pv = [None] * L
 
         h = data.x
         fuse = pipe.fused        # stale + fuse_exchange: deferred collectives
@@ -783,6 +858,9 @@ class PipeGCN:
             the (..., P*slot, pw) halo the layer consumes this step."""
             dtype = payload.dtype
             wire = codecs[ell].encode(payload)
+            if faults is not None:
+                wire = apply_faults(wire, faults, step_idx, FWD, ell,
+                                    pids, guard)
             if fuse:
                 # Stale mode: the exchange result is consumed only at t+1,
                 # so defer the wire into the packed buffer and read this
@@ -791,16 +869,31 @@ class PipeGCN:
                 feat_dtypes.append(dtype)
                 new_feat.append(None)   # filled after the fused exchange
                 return self._consume_buffer(buffers["feat"][ell])
-            fresh = codecs[ell].decode(backend.exchange(wire), pw[ell], dtype)
-            fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, pw[ell]))
+            fresh, vrows = land_feat(ell, backend.exchange(wire), dtype)
             if pipe.stale:
                 halo = self._consume_buffer(buffers["feat"][ell])
-                new_feat.append(self._update_buffer(
-                    buffers["feat"][ell], fresh, pipe.smooth_feat))
+                new_feat.append(self._update_buffer_guarded(
+                    buffers["feat"][ell], fresh, pipe.smooth_feat, vrows))
             else:
                 halo = fresh
                 new_feat.append(buffers["feat"][ell])
             return halo
+
+        def land_feat(ell, recv, dtype):
+            """Decode one received feature wire to the (..., P·slot, pw)
+            halo layout; under the guard also verify per-row checksums,
+            returning the (..., P·slot) valid-row mask and folding the
+            per-peer verdict into `feat_pv`."""
+            if guard:
+                fresh, valid = codecs[ell].decode_checked(recv, pw[ell],
+                                                          dtype)
+                feat_pv[ell] = jnp.all(valid, axis=-1)
+                vrows = valid.reshape(valid.shape[:-2] + (P * topo.slot,))
+            else:
+                fresh = codecs[ell].decode(recv, pw[ell], dtype)
+                vrows = None
+            fresh = fresh.reshape(fresh.shape[:-3] + (P * topo.slot, pw[ell]))
+            return fresh, vrows
 
         for ell in range(L):
             fin, fout = dims[ell]
@@ -867,16 +960,14 @@ class PipeGCN:
             # after the last layer. Nothing downstream of it is consumed
             # this step (results land in the t+1 buffers), so XLA is free
             # to overlap it with the loss/backward/optimizer compute.
-            for ell, fresh in enumerate(
+            for ell, recv in enumerate(
                     fused_exchange_encoded(backend, pending_feat)):
                 # decode restores the layer's own pre-pack dtype: undoes
                 # the wire encoding AND any promotion from packing layers
                 # of different dtypes into one buffer
-                fresh = codecs[ell].decode(fresh, pw[ell], feat_dtypes[ell])
-                fresh = fresh.reshape(
-                    fresh.shape[:-3] + (P * topo.slot, pw[ell]))
-                new_feat[ell] = self._update_buffer(
-                    buffers["feat"][ell], fresh, pipe.smooth_feat)
+                fresh, vrows = land_feat(ell, recv, feat_dtypes[ell])
+                new_feat[ell] = self._update_buffer_guarded(
+                    buffers["feat"][ell], fresh, pipe.smooth_feat, vrows)
 
         logits = h
 
@@ -909,23 +1000,43 @@ class PipeGCN:
             # codec, the compute dtype after any lossy wire
             dtype = db.dtype if codecs[ell].name == "f32" else compute_dtype
             wire = codecs[ell].encode(db)
+            if faults is not None:
+                wire = apply_faults(wire, faults, step_idx, BWD, ell,
+                                    pids, guard)
             if fuse:
                 # Deferred: the stale contribution comes from the t-1 (or
                 # t-k) buffer; the fresh wire joins the packed buffer for
                 # the single post-backward collective.
                 pending_grad.append((ell, wire, dtype))
                 return self._consume_buffer(buffers["grad"][ell])
-            db_recv = codecs[ell].decode(backend.exchange(wire), pw[ell],
-                                         dtype)
-            fresh_contrib = scatter(db_recv, send_idx, send_mask)
+            fresh_contrib, vrows = land_grad(ell, backend.exchange(wire),
+                                             dtype)
             if pipe.stale:
                 contrib = self._consume_buffer(buffers["grad"][ell])
-                new_grad[ell] = self._update_buffer(
-                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+                new_grad[ell] = self._update_buffer_guarded(
+                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad,
+                    vrows)
             else:
                 contrib = fresh_contrib
                 new_grad[ell] = buffers["grad"][ell]
             return contrib
+
+        def land_grad(ell, recv, dtype):
+            """Decode one received gradient wire and scatter it to owner
+            rows. Under the guard, rows failing their checksum are zeroed
+            before the scatter-add and every owner row any of them touched
+            is marked invalid (a partial peer sum is wrong, not stale);
+            the per-peer verdict lands in `grad_pv` (masked pad slots are
+            exempt — they carry no data)."""
+            if not guard:
+                db_recv = codecs[ell].decode(recv, pw[ell], dtype)
+                return scatter(db_recv, send_idx, send_mask), None
+            db_recv, valid = codecs[ell].decode_checked(recv, pw[ell], dtype)
+            inv = (~valid) & send_mask.astype(bool)
+            grad_pv[ell] = ~jnp.any(inv, axis=-1)
+            db_recv = jnp.where(valid[..., None], db_recv, 0)
+            fresh_contrib = scatter(db_recv, send_idx, send_mask)
+            return fresh_contrib, ~scatter_inv(inv, send_idx)
 
         j = dlogits
         for ell in reversed(range(L)):
@@ -992,14 +1103,24 @@ class PipeGCN:
             # sends nothing — Alg. 1 stops its backward at the first layer).
             recvs = fused_exchange_encoded(backend,
                                            [w_ for _, w_, _ in pending_grad])
-            for (ell, _, dtype), db_recv in zip(pending_grad, recvs):
+            for (ell, _, dtype), recv in zip(pending_grad, recvs):
                 # decode restores this layer's pre-pack dtype (see forward)
-                db_recv = codecs[ell].decode(db_recv, pw[ell], dtype)
-                fresh_contrib = scatter(db_recv, send_idx, send_mask)
-                new_grad[ell] = self._update_buffer(
-                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad)
+                fresh_contrib, vrows = land_grad(ell, recv, dtype)
+                new_grad[ell] = self._update_buffer_guarded(
+                    buffers["grad"][ell], fresh_contrib, pipe.smooth_grad,
+                    vrows)
 
         new_buffers = {"feat": tuple(new_feat), "grad": tuple(new_grad)}
+        if guard:
+            # Consecutive-fallback counters per (direction, layer, peer):
+            # a valid arrival resets to 0, a fallback increments. Layer 0
+            # ships no backward gradient — always "valid". Partition-local
+            # bookkeeping: no extra collective enters the step.
+            ones = jnp.ones_like(feat_pv[0])
+            gv = [pv if pv is not None else ones for pv in grad_pv]
+            ok = jnp.stack([jnp.stack(feat_pv, axis=-2),
+                            jnp.stack(gv, axis=-2)], axis=-3)
+            new_buffers["es"] = jnp.where(ok, 0, buffers["es"] + 1)
         return loss, logits, grads, new_buffers
 
     # ---------------- split-phase step (ISSUE 6) ----------------
@@ -1310,12 +1431,14 @@ class PipeGCN:
     # ---------------- public API ----------------
 
     def train_step(self, topo: Topology, params, buffers, data: ShardedData,
-                   key: jax.Array):
+                   key: jax.Array, step_idx=None, faults=None):
         """Sim-backend step over (P, ...) arrays. Returns
-        (loss, grads, new_buffers, logits)."""
+        (loss, grads, new_buffers, logits). `faults` (compiled
+        FaultTables) + `step_idx` inject that step's exchange faults."""
         backend = SimBackend()
         loss, logits, grads, new_buffers = self._step_impl(
-            backend, topo, params, buffers, data, key, train=True)
+            backend, topo, params, buffers, data, key, train=True,
+            step_idx=step_idx, faults=faults)
         return loss, grads, new_buffers, logits
 
     def forward(self, topo: Topology, params, data: ShardedData):
@@ -1361,42 +1484,60 @@ class PipeGCN:
 
         kq = self.pipe.staleness_steps
 
-        def per_device(topo_l, params, buffers, data, key):
+        def per_device(topo_l, params, buffers, data, key, step_idx, faults):
             # shard_map leaves a leading axis of size n_local = P/num_devices.
             # n_local == 1: squeeze it and run the per-partition body.
             # n_local  > 1: keep it — _step_impl treats it exactly like the
             # sim backend's partition axis (vmapped layer math), with the
             # collectives local-axis-aware. Buffer queues (k-step staleness)
-            # carry the partition axis at position 1 in both cases.
+            # carry the partition axis at position 1 in both cases; the "es"
+            # counters (guard_exchange) never grow a queue axis.
             if n_local == 1:
                 topo1 = jax.tree.map(lambda x: x[0], tuple(topo_l))
                 bsq = (lambda x: x[:, 0]) if kq > 1 else (lambda x: x[0])
-                bufs1 = jax.tree.map(bsq, buffers)
+                bufs1 = {k: jax.tree.map(
+                    (lambda x: x[0]) if k == "es" else bsq, v)
+                    for k, v in buffers.items()}
                 data1 = jax.tree.map(lambda x: x[0], tuple(data))
                 loss, logits, grads, newb = self._step_impl(
                     backend, Topology(*topo1), params, bufs1,
-                    ShardedData(*data1), key, train)
+                    ShardedData(*data1), key, train,
+                    step_idx=step_idx, faults=faults)
                 logits = logits[None]
                 bex = (lambda x: x[:, None]) if kq > 1 else (lambda x: x[None])
-                newb = None if newb is None else jax.tree.map(bex, newb)
+                if newb is not None:
+                    newb = {k: jax.tree.map(
+                        (lambda x: x[None]) if k == "es" else bex, v)
+                        for k, v in newb.items()}
             else:
                 loss, logits, grads, newb = self._step_impl(
                     backend, Topology(*topo_l), params, buffers,
-                    ShardedData(*data), key, train)
+                    ShardedData(*data), key, train,
+                    step_idx=step_idx, faults=faults)
             return loss, logits, grads, newb
 
-        def step(topo_g, params, buffers, data, key):
+        def step(topo_g, params, buffers, data, key, step_idx=None,
+                 faults=None):
             bspec = PS(None, axis_name) if kq > 1 else pspec
+
+            def buf_specs(bufs):
+                # "es" counters carry the partition axis first (no queue
+                # axis), every other buffer follows the k-aware bspec
+                return {k: jax.tree.map(
+                    lambda _: (pspec if k == "es" else bspec), v)
+                    for k, v in bufs.items()}
+
             f = _shard_map(
                 per_device, mesh=mesh,
                 in_specs=(jax.tree.map(lambda _: pspec, tuple(topo_g)),
                           jax.tree.map(lambda _: PS(), params),
-                          jax.tree.map(lambda _: bspec, buffers),
+                          buf_specs(buffers),
                           jax.tree.map(lambda _: pspec, tuple(data)),
-                          PS()),
+                          PS(), PS(), PS()),
                 out_specs=(PS(), pspec,
                            jax.tree.map(lambda _: PS(), params) if train else PS(),
-                           jax.tree.map(lambda _: bspec, buffers) if train else PS()))
-            return f(tuple(topo_g), params, buffers, tuple(data), key)
+                           buf_specs(buffers) if train else PS()))
+            return f(tuple(topo_g), params, buffers, tuple(data), key,
+                     step_idx, faults)
 
         return jax.jit(step)

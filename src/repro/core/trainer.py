@@ -10,8 +10,13 @@ import time
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.config import ModelConfig, PipeConfig
+from repro.core.faults import FaultPlan, StalenessExceededError
+from repro.core.health import (HealthConfig, TrainingAnomalyError,
+                               health_check, tree_select)
 from repro.core.pipegcn import PipeGCN, Topology
 from repro.optim import Optimizer, adam
 
@@ -20,57 +25,136 @@ from repro.optim import Optimizer, adam
 class TrainResult:
     """Outcome of one `train_pipegcn` run: the eval-metric trajectory
     (`history` lists loss / val_acc / test_acc / epoch), the final
-    parameters, the last metric dict, and the wall-clock epoch rate."""
+    parameters, the last metric dict, the wall-clock epoch rate, the
+    health/guard anomaly counters (skipped_steps, max_consecutive,
+    exchange_fallbacks, max_effective_staleness — the latter two only
+    under `guard_exchange`), and the checkpoint step the run resumed
+    from (None for a fresh run)."""
 
     history: dict          # lists: loss, val_acc, test_acc, epoch_time
     params: dict
     final_metrics: dict
     epochs_per_sec: float
+    anomalies: dict = dataclasses.field(default_factory=dict)
+    resumed_from: int | None = None
 
 
-def make_jitted_train_step(model: PipeGCN, opt: Optimizer):
-    """(topo, params, opt_state, buffers, data, key)
-    -> (loss, params, opt_state, buffers).
+def make_jitted_train_step(model: PipeGCN, opt: Optimizer,
+                           health: HealthConfig | None = None):
+    """(topo, params, opt_state, buffers, data, key[, step_idx, faults])
+    -> (loss, params, opt_state, buffers[, report]).
 
     Topology and data are traced arguments (not closure constants) so XLA
-    does not constant-fold the graph structure into the executable."""
+    does not constant-fold the graph structure into the executable.
 
-    def step(topo, params, opt_state, buffers, data, key):
-        loss, grads, new_buffers, _ = model.train_step(topo, params, buffers,
-                                                       data, key)
+    With `health` (an enabled HealthConfig) the step health-checks the
+    update (repro.core.health) and ROLLS BACK in-graph: a non-finite /
+    out-of-bound step returns the previous params/opt_state/buffers
+    bitwise (select semantics) plus a fifth element, the
+    ``{"ok", "grad_norm"}`` report. `step_idx` + `faults` (compiled
+    FaultTables) inject that step's exchange faults; both default to None
+    which traces the historical fault-free step."""
+    guarded = health is not None and health.enabled
+    limit = health.grad_norm_limit if guarded else None
+
+    def step(topo, params, opt_state, buffers, data, key, step_idx=None,
+             faults=None):
+        loss, grads, new_buffers, _ = model.train_step(
+            topo, params, buffers, data, key, step_idx=step_idx,
+            faults=faults)
         new_params, new_opt_state = opt.apply(params, grads, opt_state)
-        return loss, new_params, new_opt_state, new_buffers
+        if not guarded:
+            return loss, new_params, new_opt_state, new_buffers
+        rep = health_check(loss, grads, new_buffers, grad_norm_limit=limit)
+        ok = rep["ok"]
+        new_params = tree_select(ok, new_params, params)
+        new_opt_state = tree_select(ok, new_opt_state, opt_state)
+        new_buffers = tree_select(ok, new_buffers, buffers)
+        return loss, new_params, new_opt_state, new_buffers, rep
 
     return jax.jit(step, donate_argnums=(3,))
 
 
 def make_spmd_train_step(model: PipeGCN, opt: Optimizer, mesh, topo: Topology,
-                         axis_name: str = "parts"):
+                         axis_name: str = "parts",
+                         health: HealthConfig | None = None):
     """`make_jitted_train_step` analogue on a device mesh: the PipeGCN step
     runs under shard_map over `axis_name` (any partitions-per-device ratio,
     see `PipeGCN.make_spmd_step`); the optimizer update applies to the
-    replicated grads. Same signature/returns as the sim-backend step."""
+    replicated grads. Same signature/returns as the sim-backend step
+    (health rollback and fault injection included)."""
     spmd_step = model.make_spmd_step(mesh, topo, axis_name, train=True)
+    guarded = health is not None and health.enabled
+    limit = health.grad_norm_limit if guarded else None
 
-    def step(topo, params, opt_state, buffers, data, key):
+    def step(topo, params, opt_state, buffers, data, key, step_idx=None,
+             faults=None):
         loss, _, grads, new_buffers = spmd_step(topo, params, buffers, data,
-                                                key)
+                                                key, step_idx, faults)
         new_params, new_opt_state = opt.apply(params, grads, opt_state)
-        return loss, new_params, new_opt_state, new_buffers
+        if not guarded:
+            return loss, new_params, new_opt_state, new_buffers
+        rep = health_check(loss, grads, new_buffers, grad_norm_limit=limit)
+        ok = rep["ok"]
+        new_params = tree_select(ok, new_params, params)
+        new_opt_state = tree_select(ok, new_opt_state, opt_state)
+        new_buffers = tree_select(ok, new_buffers, buffers)
+        return loss, new_params, new_opt_state, new_buffers, rep
 
     return jax.jit(step, donate_argnums=(3,))
+
+
+def _check_staleness(es, pipe_cfg: PipeConfig, anomalies: dict, epoch: int):
+    """Host-side guard bookkeeping on one step's "es" counters; raises
+    StalenessExceededError once any exchange's effective staleness
+    (FIFO depth + consecutive fallbacks) exceeds `max_staleness`."""
+    es = np.asarray(es)
+    anomalies["exchange_fallbacks"] += int((es > 0).sum())
+    worst = int(es.max()) if es.size else 0
+    eff = pipe_cfg.staleness_steps + worst
+    anomalies["max_effective_staleness"] = max(
+        anomalies["max_effective_staleness"], eff)
+    if eff > pipe_cfg.max_staleness:
+        dst, d, ell, src = np.unravel_index(int(es.argmax()), es.shape)
+        raise StalenessExceededError(
+            f"effective staleness {eff} exceeds max_staleness="
+            f"{pipe_cfg.max_staleness} at epoch {epoch}: the "
+            f"{'forward feature' if d == 0 else 'backward gradient'} "
+            f"exchange of layer {ell} from partition {src} to partition "
+            f"{dst} has fallen back {worst} consecutive steps on top of "
+            f"the base staleness {pipe_cfg.staleness_steps}; the bounded-"
+            "staleness convergence contract no longer holds")
 
 
 def train_pipegcn(pipeline, model_cfg: ModelConfig,
                   pipe_cfg: PipeConfig, epochs: int, lr: float = 0.01,
                   seed: int = 0, eval_every: int = 10,
                   log: Callable[[str], None] | None = None,
-                  mesh=None, axis_name: str = "parts") -> TrainResult:
+                  mesh=None, axis_name: str = "parts",
+                  health: HealthConfig | None = None,
+                  faults: FaultPlan | None = None,
+                  ckpt_dir: str | None = None, checkpoint_every: int = 0,
+                  resume: bool = False) -> TrainResult:
     """Reference training loop. With `mesh=None` the step runs on the sim
     backend (single device, partitions vmapped); passing a mesh runs the
     same model under shard_map — partitions need only be a multiple of the
     mesh size (multi-partition-per-device SPMD). Eval stays on the sim
-    backend either way (global arrays round-trip between backends)."""
+    backend either way (global arrays round-trip between backends).
+
+    Fault tolerance (ISSUE 9):
+      * `health` — numerical guard policy; None means HealthConfig()
+        (guards ON: non-finite steps are skipped with bitwise rollback
+        and counted in TrainResult.anomalies). Pass
+        HealthConfig(enabled=False) to opt out.
+      * `faults` — a declarative FaultPlan compiled over the epoch horizon
+        and injected into every exchange (repro.core.faults); combine
+        with `pipe_cfg.guard_exchange` for detect-and-fall-back behaviour.
+      * `ckpt_dir` + `checkpoint_every` — atomically checkpoint the FULL
+        training state (params, opt_state, buffers, PRNG key, epoch)
+        every N epochs; `resume=True` restores the latest checkpoint and
+        continues BIT-EXACTLY (the saved key is the already-advanced
+        split chain, so the resumed run draws the same subkeys an
+        uninterrupted run would)."""
     split = pipeline.split_spec() if hasattr(pipeline, "split_spec") else None
     model = PipeGCN(model_cfg, pipe_cfg, split=split)
     topo = pipeline.topo
@@ -136,33 +220,121 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
                 f"{rep['halo_runs']} halo row runs)")
         else:
             log(f"graph layout: {layout}")
+    if health is None:
+        health = HealthConfig()
+    hc = health if health.enabled else None
     params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)
     buffers = model.init_buffers(topo)
-    step = (make_spmd_train_step(model, opt, mesh, topo, axis_name)
-            if mesh is not None else make_jitted_train_step(model, opt))
+    step = (make_spmd_train_step(model, opt, mesh, topo, axis_name,
+                                 health=hc)
+            if mesh is not None
+            else make_jitted_train_step(model, opt, health=hc))
     fwd = jax.jit(lambda t, p, d: model.forward(t, p, d)[1])
 
-    history = {"loss": [], "val_acc": [], "test_acc": [], "epoch": []}
+    tables = None
+    if faults is not None and not faults.is_empty():
+        tables = faults.compile(epochs, model_cfg.num_layers, topo.num_parts)
+        if log:
+            n = int(np.asarray(tables.drop).sum() +
+                    np.asarray(tables.corrupt).sum())
+            log(f"fault injection: {n} faulted exchange sites over "
+                f"{epochs} epochs"
+                + (", guard_exchange ON (checksum + stale fallback)"
+                   if pipe_cfg.guard_exchange else
+                   ", guard_exchange OFF (faults land undetected)"))
+
     key = jax.random.PRNGKey(seed + 1)
+    start_epoch = 0
+    resumed_from = None
+    if resume:
+        if not ckpt_dir:
+            raise ValueError("resume=True requires ckpt_dir")
+        from repro.checkpoint import latest_step, restore_checkpoint
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            template = {"params": params, "opt_state": opt_state,
+                        "buffers": buffers, "key": key,
+                        "epoch": jnp.zeros((), jnp.int32)}
+            state = restore_checkpoint(ckpt_dir, last, template)
+            params, opt_state = state["params"], state["opt_state"]
+            buffers, key = state["buffers"], state["key"]
+            start_epoch = int(state["epoch"])
+            resumed_from = last
+            if log:
+                log(f"resumed from checkpoint step {last} "
+                    f"(continuing at epoch {start_epoch})")
+
+    anomalies = {"skipped_steps": 0, "max_consecutive": 0}
+    if pipe_cfg.guard_exchange:
+        anomalies["exchange_fallbacks"] = 0
+        anomalies["max_effective_staleness"] = pipe_cfg.staleness_steps
+    consec = 0
+    last_metric, last_metric_epoch = None, -1
+    history = {"loss": [], "val_acc": [], "test_acc": [], "epoch": []}
     t0 = time.perf_counter()
-    for epoch in range(epochs):
+    for epoch in range(start_epoch, epochs):
         key, sub = jax.random.split(key)
-        loss, params, opt_state, buffers = step(topo, params, opt_state,
-                                                buffers, pipeline.train_data,
-                                                sub)
+        if tables is not None:
+            out = step(topo, params, opt_state, buffers,
+                       pipeline.train_data, sub,
+                       jnp.asarray(epoch, jnp.int32), tables)
+        else:
+            out = step(topo, params, opt_state, buffers,
+                       pipeline.train_data, sub)
+        if hc is not None:
+            loss, params, opt_state, buffers, rep = out
+            if not bool(rep["ok"]):
+                anomalies["skipped_steps"] += 1
+                consec += 1
+                anomalies["max_consecutive"] = max(
+                    anomalies["max_consecutive"], consec)
+                if consec >= hc.max_consecutive_anomalies:
+                    raise TrainingAnomalyError(
+                        f"{consec} consecutive unhealthy training steps "
+                        f"(epoch {epoch}, loss {float(loss)}, grad norm "
+                        f"{float(rep['grad_norm'])}); aborting instead of "
+                        "spinning on a poisoned run")
+            else:
+                consec = 0
+        else:
+            loss, params, opt_state, buffers = out
+        if pipe_cfg.guard_exchange:
+            _check_staleness(buffers["es"], pipe_cfg, anomalies, epoch)
         if epoch % eval_every == 0 or epoch == epochs - 1:
             logits = fwd(topo, params, pipeline.val_data)
             m = pipeline.metric(logits)
+            last_metric, last_metric_epoch = m, epoch
             history["loss"].append(float(loss))
             history["val_acc"].append(m["val"])
             history["test_acc"].append(m["test"])
             history["epoch"].append(epoch)
             if log:
-                log(f"epoch {epoch:5d} loss {float(loss):.4f} "
-                    f"val {m['val']:.4f} test {m['test']:.4f}")
+                line = (f"epoch {epoch:5d} loss {float(loss):.4f} "
+                        f"val {m['val']:.4f} test {m['test']:.4f}")
+                if anomalies["skipped_steps"]:
+                    line += f" anomalies {anomalies['skipped_steps']}"
+                if pipe_cfg.guard_exchange and anomalies["exchange_fallbacks"]:
+                    line += (f" fallbacks {anomalies['exchange_fallbacks']}"
+                             f" es {anomalies['max_effective_staleness']}"
+                             f"/{pipe_cfg.max_staleness}")
+                log(line)
+        if (ckpt_dir and checkpoint_every
+                and (epoch + 1) % checkpoint_every == 0):
+            from repro.checkpoint import save_checkpoint
+            # the saved key is ALREADY advanced past this epoch's split,
+            # so a resumed run continues the exact subkey sequence
+            save_checkpoint(ckpt_dir, epoch + 1, {
+                "params": params, "opt_state": opt_state,
+                "buffers": buffers, "key": key,
+                "epoch": jnp.asarray(epoch + 1, jnp.int32)})
     dt = time.perf_counter() - t0
-    final = pipeline.metric(fwd(topo, params, pipeline.val_data))
+    if last_metric_epoch == epochs - 1:
+        final = last_metric    # the last epoch already ran this eval
+    else:
+        final = pipeline.metric(fwd(topo, params, pipeline.val_data))
+    ran = max(epochs - start_epoch, 0)
     return TrainResult(history=history, params=params, final_metrics=final,
-                       epochs_per_sec=epochs / dt)
+                       epochs_per_sec=ran / dt if dt > 0 and ran else 0.0,
+                       anomalies=anomalies, resumed_from=resumed_from)

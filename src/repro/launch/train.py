@@ -52,10 +52,25 @@ def run_gcn(args) -> dict:
     pc = dataclasses.replace(PipeConfig.named(args.variant, gamma=args.gamma),
                              fuse_exchange=not args.no_fuse_exchange,
                              overlap=args.overlap, wire=args.wire,
-                             slice_boundary=args.slice_boundary)
+                             slice_boundary=args.slice_boundary,
+                             guard_exchange=args.guard_exchange,
+                             max_staleness=args.max_staleness)
+    faults = None
+    if args.fault_rate > 0.0:
+        from repro.core import FaultPlan
+        faults = FaultPlan(rate=args.fault_rate, rate_kind=args.fault_kind,
+                           seed=args.fault_seed)
+    health = None
+    if args.no_health:
+        from repro.core import HealthConfig
+        health = HealthConfig(enabled=False)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
-                        eval_every=args.eval_every, log=print, mesh=mesh)
+                        eval_every=args.eval_every, log=print, mesh=mesh,
+                        health=health, faults=faults,
+                        ckpt_dir=args.ckpt_dir,
+                        checkpoint_every=args.ckpt_every,
+                        resume=args.resume)
     out = {"workload": "gcn", "dataset": args.dataset,
            "partitions": args.partitions, "variant": args.variant,
            "spmd": bool(args.spmd),
@@ -67,10 +82,16 @@ def run_gcn(args) -> dict:
            "overlap": pc.overlap,
            "wire": pc.wire,
            "slice_boundary": pc.slice_boundary,
+           "guard_exchange": pc.guard_exchange,
+           "fault_rate": args.fault_rate,
            "split_feasible": pipeline.split_spec() is not None,
+           "anomalies": res.anomalies,
+           "resumed_from": res.resumed_from,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
-    if args.ckpt_dir:
+    if args.ckpt_dir and not args.ckpt_every:
+        # legacy params-only export; with --ckpt-every the trainer already
+        # wrote full-state step dirs into the same directory
         save_checkpoint(args.ckpt_dir, args.epochs, res.params)
     print(json.dumps({k: out[k] for k in
                       ("final", "epochs_per_sec")}, indent=1))
@@ -180,6 +201,25 @@ def main():
                          "runs transform-first ship the post-transform "
                          "width F_out <= F_in instead of F_in (default "
                          "off; incompatible with --overlap split-phase)")
+    ap.add_argument("--guard-exchange", action="store_true",
+                    help="per-row checksums on every boundary wire; rows "
+                         "failing verification fall back to the stale "
+                         "buffer (one extra step of staleness) instead of "
+                         "landing garbage — see README 'Fault tolerance'")
+    ap.add_argument("--max-staleness", type=int, default=8,
+                    help="effective-staleness bound of the guarded "
+                         "exchange; exceeding it aborts the run loudly")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="i.i.d. per-(step,layer,direction,pair) exchange "
+                         "fault probability injected into the wires "
+                         "(testing/chaos; combine with --guard-exchange)")
+    ap.add_argument("--fault-kind", default="drop",
+                    choices=["drop", "corrupt", "delay"],
+                    help="background fault kind for --fault-rate")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--no-health", action="store_true",
+                    help="disable the numerical health guard (skip-and-"
+                         "rollback of non-finite steps; on by default)")
     ap.add_argument("--gamma", type=float, default=0.95)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--eval-every", type=int, default=20)
@@ -195,6 +235,13 @@ def main():
     ap.add_argument("--lr", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint the FULL training state (params, "
+                         "optimizer, pipeline buffers, PRNG key, epoch) "
+                         "into --ckpt-dir every N epochs (atomic saves)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume bit-exactly from the latest checkpoint "
+                         "in --ckpt-dir (gcn workload)")
     args = ap.parse_args()
     if args.workload == "gcn":
         run_gcn(args)

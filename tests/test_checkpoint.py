@@ -1,0 +1,308 @@
+"""Atomic checkpoint/restore and bit-exact resume (ISSUE 9 satellites).
+
+`save_checkpoint` must be crash-safe (stage + fsync + rename; no torn
+`step_N` is ever visible to `latest_step`), `restore_checkpoint` must be
+strict (treedef + per-leaf dtype validated, errors naming the offending
+leaf path), and the trainer's checkpoint/resume loop must be BIT-EXACT:
+an interrupted run resumed from disk produces the same floats as an
+uninterrupted one. Real PipeGCN state — k-step staleness FIFOs, EMA
+buffers, es counters, bf16 leaves — round-trips bitwise; the SPMD
+save → sim restore cell lives in a subprocess so only it sees forced
+host devices.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.pipegcn import PipeGCN
+from repro.core.trainer import train_pipegcn
+from repro.data import GraphDataPipeline
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    return GraphDataPipeline.build("tiny", P, seed=0)
+
+
+def _cfgs(pipeline, **pipe_kw):
+    ds = pipeline.dataset
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes, dropout=0.0)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return mc, pc
+
+
+# ---------------------------------------------------------------------------
+# atomicity + validation
+# ---------------------------------------------------------------------------
+
+def test_save_is_atomic_no_tmp_left(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 3, {"w": jnp.arange(4.0)})
+    assert os.path.isdir(path)
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+    assert latest_step(d) == 3
+
+
+def test_latest_step_ignores_tmp_and_junk(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 2, {"w": jnp.zeros(2)})
+    # a crashed save's staging dir + unrelated noise must be invisible
+    os.makedirs(os.path.join(d, "step_00000099.tmp"))
+    os.makedirs(os.path.join(d, "step_xyz"))
+    open(os.path.join(d, "notes.txt"), "w").close()
+    assert latest_step(d) == 2
+    got = restore_checkpoint(d, None, {"w": jnp.zeros(2)})
+    assert (np.asarray(got["w"]) == 0).all()
+
+
+def test_save_clears_leftover_tmp_and_overwrites(tmp_path):
+    d = str(tmp_path)
+    # leftover staging dir from a crashed save at the SAME step
+    junk = os.path.join(d, "step_00000001.tmp")
+    os.makedirs(junk)
+    open(os.path.join(junk, "arrays.npz"), "w").close()
+    save_checkpoint(d, 1, {"w": jnp.ones(3)})
+    got = restore_checkpoint(d, 1, {"w": jnp.zeros(3)})
+    assert (np.asarray(got["w"]) == 1).all()
+    save_checkpoint(d, 1, {"w": jnp.full((3,), 2.0)})   # overwrite=True
+    got = restore_checkpoint(d, 1, {"w": jnp.zeros(3)})
+    assert (np.asarray(got["w"]) == 2).all()
+    with pytest.raises(FileExistsError):
+        save_checkpoint(d, 1, {"w": jnp.ones(3)}, overwrite=False)
+
+
+def test_restore_validates_treedef_same_leaf_count(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"a": jnp.zeros(2), "b": jnp.ones(3)})
+    with pytest.raises(ValueError, match="treedef"):
+        restore_checkpoint(d, 0, {"a": jnp.zeros(2), "c": jnp.ones(3)})
+
+
+def test_restore_validates_leaf_count(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="leaves"):
+        restore_checkpoint(d, 0, {"a": jnp.zeros(2), "b": jnp.ones(3)})
+
+
+def test_restore_validates_dtype_naming_leaf(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"outer": {"weights": jnp.zeros(2, jnp.float32),
+                                     "steps": jnp.zeros((), jnp.int32)}})
+    bad = {"outer": {"weights": jnp.zeros(2, jnp.float32),
+                     "steps": jnp.zeros((), jnp.int64)}}
+    with pytest.raises(ValueError) as e:
+        restore_checkpoint(d, 0, bad)
+    assert "steps" in str(e.value) and "dtype" in str(e.value)
+
+
+def test_restore_validates_shape_naming_leaf(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"weights": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError) as e:
+        restore_checkpoint(d, 0, {"weights": jnp.zeros((3, 2))})
+    assert "weights" in str(e.value) and "shape" in str(e.value)
+
+
+def test_restore_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nope"), None, {"w": jnp.zeros(1)})
+
+
+# ---------------------------------------------------------------------------
+# real PipeGCN state round-trips
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_pipegcn_fifo_guard_state(tmp_path, pipeline):
+    """k=2 staleness FIFOs + guard es counters, saved mid-run: restore is
+    bitwise AND the next step from the restored state is bitwise too."""
+    mc, pc = _cfgs(pipeline, staleness_steps=2, guard_exchange=True)
+    model = PipeGCN(mc, pc)
+    topo, data = pipeline.topo, pipeline.train_data
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = model.init_buffers(topo, dtype=jnp.float64)
+    for t in range(2):
+        _, _, bufs, _ = model.train_step(topo, params, bufs, data,
+                                         jax.random.PRNGKey(t))
+    state = {"params": params, "buffers": bufs, "key": jax.random.PRNGKey(9)}
+    save_checkpoint(str(tmp_path), 2, state)
+    template = jax.tree.map(jnp.zeros_like, state)
+    got = restore_checkpoint(str(tmp_path), 2, template)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+        assert a.dtype == b.dtype
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # FIFO queue axis survived (k=2 leading axis on the feat buffers)
+    assert got["buffers"]["feat"][0].shape[0] == 2
+    assert got["buffers"]["es"].dtype == jnp.int32
+    l0, g0, b0, _ = model.train_step(topo, state["params"], state["buffers"],
+                                     data, state["key"])
+    l1, g1, b1, _ = model.train_step(topo, got["params"], got["buffers"],
+                                     data, got["key"])
+    assert float(l0) == float(l1)
+    for a, b in zip(jax.tree.leaves((g0, b0)), jax.tree.leaves((g1, b1))):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_roundtrip_ema_state(tmp_path, pipeline):
+    """pipegcn-gf EMA buffers round-trip bitwise after real steps."""
+    mc, pc = _cfgs(pipeline)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn-gf", gamma=0.9))
+    model = PipeGCN(mc, pc)
+    topo, data = pipeline.topo, pipeline.train_data
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = model.init_buffers(topo, dtype=jnp.float64)
+    for t in range(3):
+        _, _, bufs, _ = model.train_step(topo, params, bufs, data,
+                                         jax.random.PRNGKey(t))
+    save_checkpoint(str(tmp_path), 3, bufs)
+    got = restore_checkpoint(str(tmp_path), 3,
+                             jax.tree.map(jnp.zeros_like, bufs))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(bufs)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_roundtrip_bf16_leaves(tmp_path):
+    """bf16 leaves (no native numpy dtype — stored as uint16 views)
+    round-trip bitwise, mixed with f32/int leaves in one tree."""
+    key = jax.random.PRNGKey(0)
+    state = {"h": jax.random.normal(key, (8, 5)).astype(jnp.bfloat16),
+             "w": jax.random.normal(key, (4,), dtype=jnp.float32),
+             "n": jnp.arange(3, dtype=jnp.int32)}
+    save_checkpoint(str(tmp_path), 0, state)
+    got = restore_checkpoint(str(tmp_path), 0,
+                             jax.tree.map(jnp.zeros_like, state))
+    assert got["h"].dtype == jnp.bfloat16
+    assert (np.asarray(got["h"]).view(np.uint16)
+            == np.asarray(state["h"]).view(np.uint16)).all()
+    assert (np.asarray(got["w"]) == np.asarray(state["w"])).all()
+    assert (np.asarray(got["n"]) == np.asarray(state["n"])).all()
+
+
+# ---------------------------------------------------------------------------
+# trainer kill-and-resume
+# ---------------------------------------------------------------------------
+
+def test_trainer_resume_is_bit_exact(tmp_path, pipeline):
+    """6 uninterrupted epochs == 3 epochs + kill + resume for 3 more:
+    params bitwise, histories of the resumed tail matching."""
+    mc, pc = _cfgs(pipeline, guard_exchange=True)
+    full = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=1)
+    d = str(tmp_path / "ckpt")
+    train_pipegcn(pipeline, mc, pc, epochs=3, eval_every=1,
+                  ckpt_dir=d, checkpoint_every=3)
+    assert latest_step(d) == 3
+    res = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=1,
+                        ckpt_dir=d, checkpoint_every=3, resume=True)
+    assert res.resumed_from == 3
+    assert res.history["epoch"] == [3, 4, 5]
+    for i, e in enumerate(res.history["epoch"]):
+        j = full.history["epoch"].index(e)
+        assert res.history["loss"][i] == full.history["loss"][j]
+    for a, b in zip(jax.tree.leaves(res.params),
+                    jax.tree.leaves(full.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert res.final_metrics == full.final_metrics
+
+
+def test_trainer_resume_requires_ckpt_dir(pipeline):
+    mc, pc = _cfgs(pipeline)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        train_pipegcn(pipeline, mc, pc, epochs=1, resume=True)
+
+
+def test_trainer_resume_empty_dir_starts_fresh(tmp_path, pipeline):
+    mc, pc = _cfgs(pipeline)
+    res = train_pipegcn(pipeline, mc, pc, epochs=2, eval_every=1,
+                        ckpt_dir=str(tmp_path / "empty"), resume=True)
+    assert res.resumed_from is None
+    assert res.history["epoch"] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# SPMD save -> sim restore (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os, sys, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax, numpy as np
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.core.config import ModelConfig, PipeConfig
+    from repro.core.pipegcn import PipeGCN, topology_from, shard_data
+    from repro.graph import (build_partitioned_graph, make_dataset,
+                             partition_graph)
+    from repro.graph.csr import mean_normalized
+    from repro.launch.mesh import make_partition_mesh
+
+    P = 4
+    ds = make_dataset("tiny")
+    prop = mean_normalized(ds.graph)
+    pg = build_partitioned_graph(prop, partition_graph(ds.graph, P, seed=0), P)
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes, dropout=0.0)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"),
+                             staleness_steps=2, guard_exchange=True)
+    model = PipeGCN(mc, pc)
+    mesh = make_partition_mesh(P, parts_per_device=2)
+    spmd = model.make_spmd_step(mesh, topo, train=True)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = model.init_buffers(topo, dtype=jnp.float64)
+    # two SPMD steps, then checkpoint the (sharded) state
+    for t in range(2):
+        _, _, _, bufs = spmd(topo, params, bufs, data, jax.random.PRNGKey(t))
+    d = tempfile.mkdtemp()
+    save_checkpoint(d, 2, {"params": params, "buffers": bufs})
+    got = restore_checkpoint(
+        d, 2, {"params": jax.tree.map(jnp.zeros_like, params),
+               "buffers": model.init_buffers(topo, dtype=jnp.float64)})
+    # next step on the SIM backend from the restored state vs the SPMD
+    # backend from the live state: cross-backend parity bar (1e-12)
+    l_sim, g_sim, b_sim, _ = model.train_step(
+        topo, got["params"], got["buffers"], data, jax.random.PRNGKey(5))
+    l_spmd, _, g_spmd, b_spmd = spmd(topo, params, bufs, data,
+                                     jax.random.PRNGKey(5))
+    assert abs(float(l_sim) - float(l_spmd)) < 1e-12, (l_sim, l_spmd)
+    for k in g_sim:
+        dmax = float(jnp.abs(g_sim[k] - g_spmd[k]).max())
+        assert dmax < 1e-12, (k, dmax)
+    es_sim = np.asarray(b_sim["es"]); es_spmd = np.asarray(b_spmd["es"])
+    assert (es_sim == es_spmd).all()
+    for a, b in zip(jax.tree.leaves(b_sim["feat"]),
+                    jax.tree.leaves(b_spmd["feat"])):
+        dmax = float(jnp.abs(jnp.asarray(a) - jnp.asarray(b)).max())
+        assert dmax < 1e-12, dmax
+    print("SPMD_CKPT_OK")
+""")
+
+
+@pytest.mark.slow
+def test_spmd_save_sim_restore_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SPMD_CKPT_OK" in proc.stdout

@@ -1,0 +1,292 @@
+"""Fault injection + guarded exchange (ISSUE 9), sim backend.
+
+Three contracts, in order of importance:
+
+1. ZERO-FAULT PARITY: with `guard_exchange=True` and no faults injected,
+   the step is bit-identical to the unguarded step — loss, every weight
+   gradient, every feat/grad buffer leaf — across variants × engines ×
+   wire formats, and the jaxpr collective counts are unchanged (the
+   checksum column rides inside the existing wires; the fallback is a
+   pure select; the "es" counters are partition-local).
+2. DEGRADED SEMANTICS: a dropped/corrupted payload is detected by the
+   per-row checksum, the receiver falls back to its last-good stale
+   entry (one extra step of staleness), and the "es" counters track
+   consecutive fallbacks exactly.
+3. PLAN COMPILATION: FaultPlan validation, delay ≡ drop lowering, and
+   deterministic seeded tables.
+
+Cross-backend faulted parity lives in the subprocess SPMD matrix
+(test_pipegcn_spmd.py); trainer-level escalation in test_health.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.faults import FWD, BWD, FaultPlan, FaultSite
+from repro.core.pipegcn import PipeGCN, shard_data, topology_from
+from repro.graph import build_partitioned_graph, make_dataset, partition_graph
+from repro.graph.csr import mean_normalized
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("tiny")
+    prop = mean_normalized(ds.graph)
+    pg = build_partitioned_graph(prop, partition_graph(ds.graph, P, seed=0), P)
+    topo = topology_from(pg, with_tiles=True)
+    topo = topo._replace(edge_w=topo.edge_w.astype(jnp.float64))
+    data = shard_data(pg, ds.features.astype(np.float64), ds.labels,
+                      ds.train_mask, ds.val_mask)
+    data = data._replace(x=data.x.astype(jnp.float64))
+    return ds, topo, data
+
+
+def _model(ds, agg="coo", variant="pipegcn", **pipe_kw):
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes,
+                     dropout=0.0, agg=agg)
+    pc = dataclasses.replace(PipeConfig.named(variant, gamma=0.9), **pipe_kw)
+    return PipeGCN(mc, pc)
+
+
+# ---------------------------------------------------------------------------
+# 1. zero-fault parity
+# ---------------------------------------------------------------------------
+
+PARITY_CELLS = [
+    ("pipegcn", "coo", {}),
+    ("pipegcn", "blocksparse", {}),
+    ("pipegcn-gf", "coo", {}),
+    ("pipegcn", "coo", {"staleness_steps": 3}),
+    ("pipegcn", "coo", {"wire": "bf16"}),
+    ("pipegcn", "coo", {"wire": "int8"}),
+    ("pipegcn-g", "blocksparse", {"wire": "int4"}),
+    ("pipegcn", "coo", {"fuse_exchange": False}),
+    ("pipegcn", "coo", {"wire": "auto", "staleness_steps": 2}),
+]
+
+
+@pytest.mark.parametrize("variant,agg,pipe_kw", PARITY_CELLS)
+def test_guard_zero_fault_bitwise_parity(setup, variant, agg, pipe_kw):
+    """guard_exchange with an empty fault plan is bitwise invisible."""
+    ds, topo, data = setup
+    ref = _model(ds, agg, variant, **pipe_kw)
+    grd = _model(ds, agg, variant, guard_exchange=True, **pipe_kw)
+    params = ref.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b_ref = ref.init_buffers(topo, dtype=jnp.float64)
+    b_grd = grd.init_buffers(topo, dtype=jnp.float64)
+    steps = 5 if pipe_kw.get("staleness_steps", 1) > 1 else 3
+    for t in range(steps):
+        key = jax.random.PRNGKey(t)
+        l0, g0, b_ref, _ = ref.train_step(topo, params, b_ref, data, key)
+        l1, g1, b_grd, _ = grd.train_step(topo, params, b_grd, data, key)
+        assert float(l0) == float(l1), (variant, agg, pipe_kw, t)
+        for k in g0:
+            assert float(jnp.abs(g0[k] - g1[k]).max()) == 0.0, (pipe_kw, t, k)
+        for k in ("feat", "grad"):
+            for a, b in zip(b_ref[k], b_grd[k]):
+                assert a.dtype == b.dtype
+                assert float(jnp.abs(a - b).max()) == 0.0, (pipe_kw, t, k)
+        assert int(np.asarray(b_grd["es"]).max()) == 0, (pipe_kw, t)
+
+
+def test_guard_collective_counts_unchanged(setup):
+    """The guard adds a wire COLUMN, never a collective: jaxpr counts of
+    all_to_all AND psum are identical with and without it (tier-1 via a
+    1-device mesh — the eqn count is layout-independent)."""
+    ds, topo, data = setup
+    from repro.core.trace_utils import traced_step_collectives
+    from repro.launch.mesh import make_partition_mesh
+    mesh = make_partition_mesh(P, parts_per_device=P)
+    for fuse in (True, False):
+        ref = _model(ds, fuse_exchange=fuse)
+        grd = _model(ds, fuse_exchange=fuse, guard_exchange=True)
+        c0 = traced_step_collectives(ref, mesh, topo, data)
+        c1 = traced_step_collectives(grd, mesh, topo, data)
+        assert c0 == c1, (fuse, c0, c1)
+
+
+def test_faults_none_matches_no_fault_args(setup):
+    """Passing step_idx/faults=None is the exact historical trace: same
+    results as calling train_step without the new arguments."""
+    ds, topo, data = setup
+    m = _model(ds)
+    params = m.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    b0 = m.init_buffers(topo, dtype=jnp.float64)
+    key = jax.random.PRNGKey(7)
+    l0, g0, _, _ = m.train_step(topo, params, b0, data, key)
+    l1, g1, _, _ = m.train_step(topo, params, b0, data, key,
+                                step_idx=None, faults=None)
+    assert float(l0) == float(l1)
+    for k in g0:
+        assert float(jnp.abs(g0[k] - g1[k]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 2. degraded semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fuse", [True, False])
+def test_dropped_feature_falls_back_to_stale_entry(setup, fuse):
+    """A dropped forward payload leaves the destination's buffer rows for
+    that (layer, peer) EXACTLY at their previous value; everything else
+    updates normally; es counts the event and resets on recovery."""
+    ds, topo, data = setup
+    m = _model(ds, fuse_exchange=fuse, guard_exchange=True)
+    plan = FaultPlan(sites=(FaultSite(step=1, layer=1, src=0, dst=2,
+                                      direction="fwd", kind="drop"),))
+    tables = plan.compile(4, 3, P)
+    params = m.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = m.init_buffers(topo, dtype=jnp.float64)
+    clean = m.init_buffers(topo, dtype=jnp.float64)
+    slot = topo.slot
+    for t in range(3):
+        key = jax.random.PRNGKey(t)
+        prev = bufs["feat"][1]
+        _, _, bufs, _ = m.train_step(topo, params, bufs, data, key,
+                                     jnp.int32(t), tables)
+        _, _, clean, _ = m.train_step(topo, params, clean, data, key)
+        es = np.asarray(bufs["es"])
+        cur, ref = np.asarray(bufs["feat"][1]), np.asarray(clean["feat"][1])
+        if t == 1:
+            # dst partition 2's rows from peer 0 kept the previous value
+            # (here: the zero-init state), everything else matches clean
+            assert es[2, FWD, 1, 0] == 1
+            assert es.sum() == 1
+            got = cur[2, 0 * slot:(0 + 1) * slot]
+            old = np.asarray(prev)[2, 0 * slot:(0 + 1) * slot]
+            assert (got == old).all()
+            mask = np.ones_like(cur, bool)
+            mask[2, 0 * slot:(0 + 1) * slot] = False
+            assert (cur[mask] == ref[mask]).all()
+        else:
+            assert es.sum() == 0, t
+            # one stale row diverges the downstream compute, so only
+            # compare the buffers BEFORE any fault has fired
+            if t == 0:
+                assert (cur == ref).all()
+
+
+def test_consecutive_drops_accumulate_es(setup):
+    """es counts CONSECUTIVE fallbacks: three drops in a row reach 3,
+    one valid arrival resets to 0."""
+    ds, topo, data = setup
+    m = _model(ds, guard_exchange=True, max_staleness=8)
+    sites = tuple(FaultSite(step=t, layer=2, src=1, dst=0,
+                            direction="bwd", kind="drop") for t in range(3))
+    tables = FaultPlan(sites=sites).compile(5, 3, P)
+    params = m.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = m.init_buffers(topo, dtype=jnp.float64)
+    seen = []
+    for t in range(4):
+        _, _, bufs, _ = m.train_step(topo, params, bufs, data,
+                                     jax.random.PRNGKey(t), jnp.int32(t),
+                                     tables)
+        seen.append(int(np.asarray(bufs["es"])[0, BWD, 2, 1]))
+    assert seen == [1, 2, 3, 0]
+
+
+def test_corruption_detected_by_checksum(setup):
+    """Seeded bit-flips into the wire bytes trip the per-row checksum:
+    the victim (dst, dir, layer, src) site — and only it — falls back."""
+    ds, topo, data = setup
+    for wire in ("f32", "bf16", "int8"):
+        m = _model(ds, wire=wire, guard_exchange=True)
+        plan = FaultPlan(sites=(FaultSite(step=0, layer=1, src=3, dst=1,
+                                          direction="fwd", kind="corrupt"),),
+                         density=0.2, seed=3)
+        tables = plan.compile(2, 3, P)
+        params = m.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+        bufs = m.init_buffers(topo, dtype=jnp.float64)
+        _, _, bufs, _ = m.train_step(topo, params, bufs, data,
+                                     jax.random.PRNGKey(0), jnp.int32(0),
+                                     tables)
+        es = np.asarray(bufs["es"])
+        assert es[1, FWD, 1, 3] == 1, wire
+        assert es.sum() == 1, wire
+
+
+def test_drop_without_guard_lands_zeros(setup):
+    """Chaos mode: with guard_exchange OFF a dropped payload lands as
+    zeros silently — the step still runs, es does not exist, and the
+    result differs from the clean run (that detection gap is exactly
+    what the checksum column buys)."""
+    ds, topo, data = setup
+    m = _model(ds)     # guard off
+    plan = FaultPlan(sites=(FaultSite(step=0, layer=0, src=0, dst=1,
+                                      direction="fwd", kind="drop"),))
+    tables = plan.compile(2, 3, P)
+    params = m.init_params(jax.random.PRNGKey(0), dtype=jnp.float64)
+    bufs = m.init_buffers(topo, dtype=jnp.float64)
+    key = jax.random.PRNGKey(0)
+    _, _, b_fault, _ = m.train_step(topo, params, bufs, data, key,
+                                    jnp.int32(0), tables)
+    _, _, b_clean, _ = m.train_step(topo, params, bufs, data, key)
+    assert "es" not in b_fault
+    d = float(jnp.abs(b_fault["feat"][0] - b_clean["feat"][0]).max())
+    assert d > 0.0
+
+
+# ---------------------------------------------------------------------------
+# 3. plan compilation
+# ---------------------------------------------------------------------------
+
+def test_delay_compiles_as_drop():
+    """Every step re-sends fresh boundary data, so a one-step-late payload
+    is superseded on arrival: delay and drop lower to the same tables."""
+    site = dict(step=2, layer=1, src=0, dst=3, direction="fwd")
+    t_delay = FaultPlan(sites=(FaultSite(kind="delay", **site),)).compile(4, 3, P)
+    t_drop = FaultPlan(sites=(FaultSite(kind="drop", **site),)).compile(4, 3, P)
+    assert (np.asarray(t_delay.drop) == np.asarray(t_drop.drop)).all()
+    assert not np.asarray(t_delay.corrupt).any()
+
+
+def test_background_rate_tables():
+    """rate faults are deterministic in the seed, never hit the self-pair
+    diagonal, and never hit the (bwd, layer 0) plane (no such exchange)."""
+    t1 = FaultPlan(rate=0.3, seed=7).compile(10, 3, P)
+    t2 = FaultPlan(rate=0.3, seed=7).compile(10, 3, P)
+    t3 = FaultPlan(rate=0.3, seed=8).compile(10, 3, P)
+    d1 = np.asarray(t1.drop)
+    assert (d1 == np.asarray(t2.drop)).all()
+    assert (d1 != np.asarray(t3.drop)).any()
+    assert d1.any()
+    eye = np.eye(P, dtype=bool)
+    assert not d1[..., eye].any()
+    assert not d1[:, BWD, 0].any()
+
+
+def test_faultplan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(rate_kind="meteor")
+    with pytest.raises(ValueError):
+        FaultPlan(density=0.0)
+    with pytest.raises(ValueError):
+        FaultSite(step=0, layer=0, src=0, dst=1, direction="sideways")
+    with pytest.raises(ValueError):
+        FaultSite(step=0, layer=0, src=0, dst=1, kind="gamma-ray")
+    with pytest.raises(ValueError):  # out-of-range site caught at compile
+        FaultPlan(sites=(FaultSite(step=0, layer=9, src=0, dst=1),)
+                  ).compile(4, 3, P)
+    assert FaultPlan().is_empty()
+    assert not FaultPlan(rate=0.1).is_empty()
+
+
+def test_pipeconfig_guard_validation():
+    with pytest.raises(ValueError):  # vanilla has no stale fallback
+        PipeConfig(stale=False, guard_exchange=True)
+    with pytest.raises(ValueError):  # bound below the FIFO depth
+        PipeConfig(guard_exchange=True, staleness_steps=4, max_staleness=2)
+    with pytest.raises(ValueError):  # split schedule has no mask path
+        PipeConfig(guard_exchange=True, overlap="split-phase")
+    PipeConfig(guard_exchange=True, staleness_steps=2, max_staleness=2)

@@ -1,0 +1,254 @@
+"""Numerical health guard: jitted verdict, bitwise rollback, escalation.
+
+The guard's contract mirrors the exchange guard's: INVISIBLE when healthy
+(a guarded step returns bit-identical params/opt_state/buffers to an
+unguarded one), a pure select when not (the poisoned update is discarded
+and the previous state survives bitwise), and loud once the run can no
+longer make progress (TrainingAnomalyError after N consecutive skips).
+Also covers the final-eval-reuse satellite: `train_pipegcn` must not
+re-run the eval forward pass when the last epoch already evaluated.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.config import ModelConfig, PipeConfig
+from repro.core.health import (HealthConfig, TrainingAnomalyError,
+                               health_check, tree_select)
+from repro.core.pipegcn import PipeGCN
+from repro.core.trainer import make_jitted_train_step, train_pipegcn
+from repro.data import GraphDataPipeline
+from repro.optim import adam
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    return GraphDataPipeline.build("tiny", P, seed=0)
+
+
+def _model(pipeline, **pipe_kw):
+    ds = pipeline.dataset
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=2, num_classes=ds.num_classes, dropout=0.0)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return PipeGCN(mc, pc)
+
+
+# ---------------------------------------------------------------------------
+# health_check verdicts
+# ---------------------------------------------------------------------------
+
+def test_health_check_finite_ok():
+    grads = {"w": jnp.ones((3, 3)), "b": jnp.zeros((3,))}
+    rep = health_check(jnp.float32(0.5), grads)
+    assert bool(rep["ok"])
+    assert float(rep["grad_norm"]) == pytest.approx(3.0)
+
+
+@pytest.mark.parametrize("bad", [jnp.nan, jnp.inf, -jnp.inf])
+def test_health_check_nonfinite_loss(bad):
+    rep = health_check(jnp.float32(bad), {"w": jnp.ones(2)})
+    assert not bool(rep["ok"])
+
+
+def test_health_check_nonfinite_grad_leaf():
+    grads = {"w": jnp.ones((2, 2)), "b": jnp.array([1.0, jnp.nan])}
+    rep = health_check(jnp.float32(0.1), grads)
+    assert not bool(rep["ok"])
+
+
+def test_health_check_buffers():
+    grads = {"w": jnp.ones(2)}
+    bufs = {"feat": (jnp.ones((P, 3)),), "es": jnp.zeros((P,), jnp.int32)}
+    assert bool(health_check(jnp.float32(0.1), grads, bufs)["ok"])
+    bufs["feat"] = (bufs["feat"][0].at[0, 0].set(jnp.inf),)
+    assert not bool(health_check(jnp.float32(0.1), grads, bufs)["ok"])
+    # integer leaves (the es counters) are exempt from finiteness — an
+    # int32 has no Inf and must not break the predicate
+    assert bool(health_check(jnp.float32(0.1), grads,
+                             {"es": jnp.full((2,), 2**31 - 1, jnp.int32)}
+                             )["ok"])
+
+
+def test_health_check_grad_norm_limit():
+    grads = {"w": jnp.full((4,), 10.0)}
+    assert bool(health_check(jnp.float32(0.1), grads)["ok"])
+    rep = health_check(jnp.float32(0.1), grads, grad_norm_limit=1.0)
+    assert not bool(rep["ok"])
+    assert bool(health_check(jnp.float32(0.1), grads,
+                             grad_norm_limit=100.0)["ok"])
+
+
+def test_tree_select_bitwise():
+    a = {"x": jnp.array([1.0, 2.0]), "y": (jnp.int32(3),)}
+    b = {"x": jnp.array([-1.0, -2.0]), "y": (jnp.int32(-3),)}
+    t = tree_select(jnp.bool_(True), a, b)
+    f = tree_select(jnp.bool_(False), a, b)
+    for got, want in zip(jax.tree.leaves(t), jax.tree.leaves(a)):
+        assert (np.asarray(got) == np.asarray(want)).all()
+    for got, want in zip(jax.tree.leaves(f), jax.tree.leaves(b)):
+        assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_health_config_validation():
+    with pytest.raises(ValueError):
+        HealthConfig(grad_norm_limit=0.0)
+    with pytest.raises(ValueError):
+        HealthConfig(grad_norm_limit=-1.0)
+    with pytest.raises(ValueError):
+        HealthConfig(max_consecutive_anomalies=0)
+    HealthConfig(grad_norm_limit=None)
+
+
+# ---------------------------------------------------------------------------
+# guarded step: invisible when healthy, pure rollback when not
+# ---------------------------------------------------------------------------
+
+def test_guarded_step_healthy_is_bitwise_unguarded(pipeline):
+    model = _model(pipeline)
+    topo, data = pipeline.topo, pipeline.train_data
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = adam(0.01)
+    opt_state = opt.init(params)
+    plain = make_jitted_train_step(model, opt)
+    guard = make_jitted_train_step(model, opt, health=HealthConfig())
+    key = jax.random.PRNGKey(1)
+    l0, p0, s0, b0 = plain(topo, params, opt_state,
+                           model.init_buffers(topo), data, key)
+    l1, p1, s1, b1, rep = guard(topo, params, opt_state,
+                                model.init_buffers(topo), data, key)
+    assert bool(rep["ok"])
+    assert float(l0) == float(l1)
+    for a, b in zip(jax.tree.leaves((p0, s0, b0)),
+                    jax.tree.leaves((p1, s1, b1))):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_guarded_step_rolls_back_on_nan(pipeline):
+    model = _model(pipeline)
+    topo, data = pipeline.topo, pipeline.train_data
+    data = data._replace(x=jnp.full_like(data.x, jnp.nan))
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = adam(0.01)
+    opt_state = opt.init(params)
+    step = make_jitted_train_step(model, opt, health=HealthConfig())
+    # host copies first: buffers are donated into the step
+    want = jax.tree.map(np.asarray, (params, opt_state))
+    want_buf = jax.tree.map(np.asarray, model.init_buffers(topo))
+    loss, p1, s1, b1, rep = step(topo, params, opt_state,
+                                 model.init_buffers(topo), data,
+                                 jax.random.PRNGKey(1))
+    assert not bool(rep["ok"])
+    assert not np.isfinite(float(loss))
+    for a, b in zip(jax.tree.leaves((p1, s1)), jax.tree.leaves(want)):
+        assert (np.asarray(a) == b).all()
+    for a, b in zip(jax.tree.leaves(b1), jax.tree.leaves(want_buf)):
+        assert (np.asarray(a) == b).all()
+
+
+def test_guarded_step_grad_norm_limit_rolls_back(pipeline):
+    model = _model(pipeline)
+    topo, data = pipeline.topo, pipeline.train_data
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = adam(0.01)
+    opt_state = opt.init(params)
+    step = make_jitted_train_step(
+        model, opt, health=HealthConfig(grad_norm_limit=1e-12))
+    want = jax.tree.map(np.asarray, params)
+    loss, p1, _, _, rep = step(topo, params, opt_state,
+                               model.init_buffers(topo), data,
+                               jax.random.PRNGKey(1))
+    assert np.isfinite(float(loss))        # the step itself is fine...
+    assert not bool(rep["ok"])             # ...but over the bound
+    assert float(rep["grad_norm"]) > 1e-12
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(want)):
+        assert (np.asarray(a) == b).all()
+
+
+# ---------------------------------------------------------------------------
+# trainer loop: counting, escalation, opt-out, final-eval reuse
+# ---------------------------------------------------------------------------
+
+def _cfgs(pipeline, **pipe_kw):
+    ds = pipeline.dataset
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=2, num_classes=ds.num_classes, dropout=0.0)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return mc, pc
+
+
+def test_trainer_healthy_run_counts_zero(pipeline):
+    mc, pc = _cfgs(pipeline)
+    res = train_pipegcn(pipeline, mc, pc, epochs=3, eval_every=2)
+    assert res.anomalies["skipped_steps"] == 0
+    assert res.anomalies["max_consecutive"] == 0
+    assert res.resumed_from is None
+
+
+def test_trainer_escalates_on_poisoned_run(pipeline):
+    mc, pc = _cfgs(pipeline)
+    poisoned = dataclasses.replace(
+        pipeline,
+        train_data=pipeline.train_data._replace(
+            x=jnp.full_like(pipeline.train_data.x, jnp.nan)))
+    with pytest.raises(TrainingAnomalyError, match="3 consecutive"):
+        train_pipegcn(poisoned, mc, pc, epochs=10, eval_every=100,
+                      health=HealthConfig(max_consecutive_anomalies=3))
+
+
+def test_trainer_health_optout_keeps_running(pipeline):
+    mc, pc = _cfgs(pipeline)
+    poisoned = dataclasses.replace(
+        pipeline,
+        train_data=pipeline.train_data._replace(
+            x=jnp.full_like(pipeline.train_data.x, jnp.nan)))
+    res = train_pipegcn(poisoned, mc, pc, epochs=3, eval_every=100,
+                        health=HealthConfig(enabled=False))
+    assert res.anomalies["skipped_steps"] == 0   # nobody counted
+    assert not np.isfinite(res.history["loss"][-1])
+
+
+def test_trainer_default_health_skips_and_reports(pipeline):
+    """Default policy (health=None -> HealthConfig()): a poisoned run
+    below the escalation bound finishes, every step skipped, params
+    bitwise at their init values."""
+    mc, pc = _cfgs(pipeline)
+    poisoned = dataclasses.replace(
+        pipeline,
+        train_data=pipeline.train_data._replace(
+            x=jnp.full_like(pipeline.train_data.x, jnp.nan)))
+    res = train_pipegcn(poisoned, mc, pc, epochs=4, eval_every=2)
+    assert res.anomalies["skipped_steps"] == 4
+    assert res.anomalies["max_consecutive"] == 4
+    model = PipeGCN(mc, pc)
+    init = model.init_params(jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(init)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_trainer_reuses_last_epoch_eval(pipeline):
+    """The final metric is the last epoch's eval (the loop always
+    evaluates epoch == epochs-1), never a duplicate forward pass."""
+    mc, pc = _cfgs(pipeline)
+    calls = []
+    counted = dataclasses.replace(pipeline)
+    orig = pipeline.metric
+
+    def counting_metric(logits):
+        m = orig(logits)
+        calls.append(m)
+        return m
+
+    counted.metric = counting_metric
+    res = train_pipegcn(counted, mc, pc, epochs=5, eval_every=2)
+    # evals at epochs 0, 2, 4 — and 4 == epochs-1 doubles as the final
+    assert len(calls) == 3
+    assert res.final_metrics is calls[-1]
+    assert res.history["epoch"] == [0, 2, 4]
