@@ -23,8 +23,10 @@ from __future__ import annotations
 
 import json
 import os
+import random
 import re
 import shutil
+import time
 
 import jax
 import numpy as np
@@ -59,8 +61,40 @@ def _leaf_paths(tree) -> list[str]:
     return [jax.tree_util.keystr(kp) for kp, _ in flat]
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree,
-                    overwrite: bool = True) -> str:
+def save_checkpoint(ckpt_dir: str, step: int, tree, overwrite: bool = True,
+                    keep_last: int | None = None, retries: int = 3,
+                    retry_delay: float = 0.05) -> str:
+    """Atomically save `tree` as `<ckpt_dir>/step_<N>` (see module
+    docstring for the stage-fsync-rename protocol).
+
+    Transient ``OSError``s (a flaky or briefly-full filesystem) are
+    retried up to `retries` total attempts with jittered exponential
+    backoff — each attempt restages from scratch, so a landed save is
+    always complete. `FileExistsError` under ``overwrite=False`` is a
+    caller error, never retried. With `keep_last`, all but the newest
+    `keep_last` fully-committed step dirs are pruned after the save lands
+    (the dir just written is never pruned; `.tmp` staging leftovers are
+    not counted as checkpoints and are swept only for pruned steps)."""
+    if retries < 1:
+        raise ValueError(f"retries must be >= 1, got {retries}")
+    for attempt in range(retries):
+        try:
+            path = _write_checkpoint(ckpt_dir, step, tree, overwrite)
+            break
+        except FileExistsError:
+            raise
+        except OSError:
+            if attempt == retries - 1:
+                raise
+            delay = retry_delay * (2 ** attempt)
+            time.sleep(delay * (1.0 + random.random()))
+    if keep_last is not None:
+        _prune_checkpoints(ckpt_dir, keep_last, just_wrote=step)
+    return path
+
+
+def _write_checkpoint(ckpt_dir: str, step: int, tree,
+                      overwrite: bool = True) -> str:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = path + ".tmp"
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -99,6 +133,28 @@ def save_checkpoint(ckpt_dir: str, step: int, tree,
     finally:
         os.close(fd)
     return path
+
+
+def _prune_checkpoints(ckpt_dir: str, keep_last: int, just_wrote: int):
+    """Remove all but the newest `keep_last` committed `step_*` dirs.
+
+    Only fully-committed dirs count toward (and are eligible for) the
+    retention budget: a `step_N.tmp` staging leftover is neither a
+    checkpoint nor retention-countable, and is swept only alongside its
+    pruned step. The dir just written is never pruned, whatever its
+    step number."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep_last] if keep_last < len(steps) else []:
+        if s == just_wrote:
+            continue
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+        tmp = os.path.join(ckpt_dir, f"step_{s:08d}.tmp")
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
 
 
 def latest_step(ckpt_dir: str) -> int | None:

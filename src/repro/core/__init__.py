@@ -1,7 +1,8 @@
 """PipeGCN core: the paper's contribution as a composable JAX module."""
 from repro.core.config import ModelConfig, PipeConfig
+from repro.core.elastic import (DeviceLossError, ElasticConfig, ElasticPlan)
 from repro.core.faults import (FaultPlan, FaultSite, FaultTables,
-                               StalenessExceededError)
+                               StalenessExceededError, device_down_site)
 from repro.core.health import (HealthConfig, TrainingAnomalyError,
                                health_check)
 from repro.core.pipegcn import (PipeGCN, ShardedData, Topology,
@@ -16,4 +17,6 @@ __all__ = ["ModelConfig", "PipeConfig", "PipeGCN", "ShardedData", "Topology",
            "TrainResult", "make_jitted_train_step", "make_spmd_train_step",
            "train_pipegcn", "make_pipegcn_loss",
            "FaultPlan", "FaultSite", "FaultTables", "StalenessExceededError",
+           "device_down_site",
+           "DeviceLossError", "ElasticConfig", "ElasticPlan",
            "HealthConfig", "TrainingAnomalyError", "health_check"]

@@ -1,0 +1,389 @@
+"""Elastic training runtime: survive device loss by remapping partitions.
+
+PipeGCN's bounded-staleness theorems price every boundary exchange in
+*iterations of staleness*, not in availability — so a lost device is not
+a fatal event but an extreme staleness event: the partitions it hosted
+are merely VERY stale on the survivors. This module turns that
+observation into the availability story:
+
+1. :class:`ElasticPlan` — given the survivor set, remap the lost
+   device's ``n_local`` partitions onto the survivors. The device-major
+   layout (partition p lives on device ``p // n_local``) is preserved by
+   APPENDING padded idle partitions at the end of the flat partition
+   axis when the real count does not divide the survivor count. Real
+   partitions keep their ids and their order, so ``edge_col`` halo
+   offsets, ``send_idx`` peer ordering, and compiled fault tables stay
+   valid; the pads are masked out of everything (all-False send/inner
+   masks, zero edges and tiles), so they are idle slots, not
+   participants. Re-sharding `Topology`/`ShardedData`/pipeline buffers
+   is therefore pure array padding (:func:`remap_topology`,
+   :func:`remap_data`, :func:`remap_buffers`) — the partitioned graph is
+   never rebuilt, and :meth:`ElasticPlan.device_view` reuses
+   ``graph_pipeline.to_local_layout`` for the physical per-device view.
+2. :func:`detect_device_loss` — detection rides the guarded exchange's
+   per-exchange ``es`` counters (PR 9): a device is declared down once
+   EVERY forward exchange out of it has fallen back ``detect_after``
+   consecutive steps on every off-device destination. Scattered faults
+   never blanket a whole device row, so they keep degrading gracefully
+   under the ordinary staleness budget.
+3. Staleness-escalated warm recovery — buffer rows restored from a
+   checkpoint for remapped partitions are marked with ``warm_staleness``
+   consecutive-fallback counts (:func:`warm_mark`): stale-but-usable,
+   and ``PipeConfig.max_staleness`` bounds the warmup window (an
+   exchange that keeps failing after recovery starts its countdown from
+   ``warm_staleness``, not zero). Mid-run recovery and a fresh launch at
+   the smaller device count route through the SAME
+   restore → remap → mark path, which is what makes post-remap training
+   bitwise identical between the two (the gate in
+   ``tests/test_elastic.py``).
+4. Rejoin — at a checkpoint boundary the trainer unmaps the live state
+   back to the flat layout (:func:`unmap_buffers` strips the pads) and
+   resumes on the original device count, warm-marking the partitions
+   that moved home.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faults import FWD, FaultTables, StalenessExceededError
+from repro.core.pipegcn import ShardedData, Topology
+
+
+class DeviceLossError(StalenessExceededError):
+    """A whole device's exchanges went stale: staleness escalated to loss.
+
+    Subclasses :class:`StalenessExceededError` because device loss IS the
+    extreme case of the staleness contract breaking — but carries enough
+    structure (`device`, the ORIGINAL device id; `survivors`; the
+    detection `epoch`) for the trainer to recover instead of aborting.
+    """
+
+    def __init__(self, message: str, device: int, survivors, epoch: int):
+        super().__init__(message)
+        self.device = int(device)
+        self.survivors = tuple(survivors)
+        self.epoch = int(epoch)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Elastic-runtime policy knobs (`train_pipegcn(elastic=...)`).
+
+    ``detect_after`` — consecutive whole-device fallback steps before a
+    device is declared lost; ``warm_staleness`` — the es count stamped on
+    remapped exchanges at recovery (must stay BELOW ``detect_after`` or a
+    freshly recovered run would re-detect its own warm marks);
+    ``max_recoveries`` — recovery budget before the loss is re-raised;
+    ``rejoin`` — scale back up at a checkpoint boundary once the lost
+    device is healthy again; ``parts_per_device`` — device granularity of
+    the sim backend (mesh runs infer it from the mesh size).
+    """
+
+    enabled: bool = True
+    detect_after: int = 2
+    warm_staleness: int = 1
+    max_recoveries: int = 2
+    rejoin: bool = True
+    parts_per_device: int = 1
+
+    def __post_init__(self):
+        if self.detect_after < 1:
+            raise ValueError(
+                f"detect_after must be >= 1, got {self.detect_after}")
+        if not 0 <= self.warm_staleness < self.detect_after:
+            raise ValueError(
+                f"warm_staleness={self.warm_staleness} must be in "
+                f"[0, detect_after={self.detect_after}) — a recovered run "
+                "must not re-detect its own warm marks")
+        if self.max_recoveries < 0:
+            raise ValueError(
+                f"max_recoveries must be >= 0, got {self.max_recoveries}")
+        if self.parts_per_device < 1:
+            raise ValueError(
+                f"parts_per_device must be >= 1, got {self.parts_per_device}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Survivor remap of ``num_parts`` device-major partitions.
+
+    The original layout has ``orig_devices`` devices hosting
+    ``num_parts // orig_devices`` partitions each; ``survivors`` names
+    the original device ids still alive. The remapped layout keeps the
+    flat partition order and pads it to ``padded_parts`` (the smallest
+    multiple of ``len(survivors)`` ≥ ``num_parts``), so survivor number
+    ``d`` (positional) hosts padded partitions
+    ``[d*n_local, (d+1)*n_local)`` — pads are idle slots masked out of
+    the exchange. A plan with all devices surviving is the identity
+    (``pad_parts == 0`` and every remap function returns its input).
+    """
+
+    num_parts: int
+    orig_devices: int
+    survivors: tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "survivors",
+                           tuple(sorted(set(int(s) for s in self.survivors))))
+        if self.orig_devices < 1 or self.num_parts % self.orig_devices:
+            raise ValueError(
+                f"num_parts={self.num_parts} is not a multiple of "
+                f"orig_devices={self.orig_devices}")
+        # reuse the canonical layout validation (device-major contract)
+        from repro.launch.mesh import partition_layout
+        partition_layout(self.num_parts, self.num_parts // self.orig_devices,
+                         num_devices=self.orig_devices)
+        if not self.survivors:
+            raise ValueError("survivor set is empty — nothing to remap onto")
+        if any(not 0 <= s < self.orig_devices for s in self.survivors):
+            raise ValueError(
+                f"survivors {self.survivors} out of range for "
+                f"orig_devices={self.orig_devices}")
+
+    # ---------------- derived layout ----------------
+
+    @property
+    def orig_n_local(self) -> int:
+        """Partitions per device in the original layout."""
+        return self.num_parts // self.orig_devices
+
+    @property
+    def n_devices(self) -> int:
+        """Survivor count (the remapped mesh size)."""
+        return len(self.survivors)
+
+    @property
+    def n_local(self) -> int:
+        """Partitions per survivor (real + pad) in the remapped layout."""
+        return math.ceil(self.num_parts / self.n_devices)
+
+    @property
+    def padded_parts(self) -> int:
+        """Size of the remapped flat partition axis (pads appended)."""
+        return self.n_devices * self.n_local
+
+    @property
+    def pad_parts(self) -> int:
+        """Number of appended idle pad partitions."""
+        return self.padded_parts - self.num_parts
+
+    @property
+    def lost(self) -> tuple[int, ...]:
+        """Original device ids NOT in the survivor set."""
+        return tuple(d for d in range(self.orig_devices)
+                     if d not in self.survivors)
+
+    def assignment(self) -> tuple[tuple[int, ...], ...]:
+        """Real partition ids hosted by each survivor (positional), in
+        device-major order; pads are omitted."""
+        return tuple(
+            tuple(p for p in range(d * self.n_local, (d + 1) * self.n_local)
+                  if p < self.num_parts)
+            for d in range(self.n_devices))
+
+    def moved_partitions(self) -> frozenset:
+        """Real partitions whose hosting device changed under the plan —
+        the rows whose restored buffer state is warm-marked."""
+        return frozenset(
+            p for p in range(self.num_parts)
+            if self.survivors[p // self.n_local] != p // self.orig_n_local)
+
+    def device_view(self, tree, axis: int = 0):
+        """Physical (n_devices, n_local, …) per-survivor view of a
+        remapped flat-partition pytree (via graph_pipeline.to_local_layout)."""
+        from repro.data.graph_pipeline import to_local_layout
+        return to_local_layout(tree, self.n_local, axis=axis)
+
+
+# ---------------- remap / unmap (pure padding) ----------------
+
+
+def _pad_axis(x, axis: int, extra: int):
+    if extra == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, extra)
+    return jnp.pad(x, widths)
+
+
+def remap_topology(topo: Topology, plan: ElasticPlan) -> Topology:
+    """Pad a Topology to the plan's survivor layout.
+
+    Leading partition axis and the ``send_idx``/``send_mask`` peer axis
+    grow to ``padded_parts``; pad partitions carry zero edges/tiles and
+    all-False masks, so they aggregate nothing, send nothing valid, and
+    (`inner_mask=False`) contribute nothing to loss or eval.
+    """
+    if topo.num_parts != plan.num_parts:
+        raise ValueError(
+            f"topology has {topo.num_parts} partitions, plan remaps "
+            f"{plan.num_parts}")
+    pad = plan.pad_parts
+    if pad == 0:
+        return topo
+
+    def lead(x):
+        return None if x is None else _pad_axis(x, 0, pad)
+
+    return topo._replace(
+        edge_row=lead(topo.edge_row), edge_col=lead(topo.edge_col),
+        edge_w=lead(topo.edge_w),
+        send_idx=_pad_axis(_pad_axis(topo.send_idx, 0, pad), 1, pad),
+        send_mask=_pad_axis(_pad_axis(topo.send_mask, 0, pad), 1, pad),
+        inner_mask=lead(topo.inner_mask),
+        tile_rows=lead(topo.tile_rows), tile_cols=lead(topo.tile_cols),
+        tile_vals=lead(topo.tile_vals), tile_t_out=lead(topo.tile_t_out),
+        tile_t_in=lead(topo.tile_t_in), tile_t_perm=lead(topo.tile_t_perm))
+
+
+def unmap_topology(topo: Topology, plan: ElasticPlan) -> Topology:
+    """Inverse of :func:`remap_topology`: strip the pad partitions."""
+    p = plan.num_parts
+    if topo.num_parts == p:
+        return topo
+
+    def lead(x):
+        return None if x is None else x[:p]
+
+    return topo._replace(
+        edge_row=lead(topo.edge_row), edge_col=lead(topo.edge_col),
+        edge_w=lead(topo.edge_w),
+        send_idx=topo.send_idx[:p, :p], send_mask=topo.send_mask[:p, :p],
+        inner_mask=lead(topo.inner_mask),
+        tile_rows=lead(topo.tile_rows), tile_cols=lead(topo.tile_cols),
+        tile_vals=lead(topo.tile_vals), tile_t_out=lead(topo.tile_t_out),
+        tile_t_in=lead(topo.tile_t_in), tile_t_perm=lead(topo.tile_t_perm))
+
+
+def remap_data(data: ShardedData, plan: ElasticPlan) -> ShardedData:
+    """Pad every leading-partition data array with zero rows (labels 0,
+    masks False) — pads never enter loss or metrics."""
+    pad = plan.pad_parts
+    if pad == 0:
+        return data
+    return jax.tree.map(lambda a: _pad_axis(a, 0, pad), data)
+
+
+def unmap_data(data: ShardedData, plan: ElasticPlan) -> ShardedData:
+    """Inverse of :func:`remap_data`: strip the pad partitions."""
+    if data.x.shape[0] == plan.num_parts:
+        return data
+    return jax.tree.map(lambda a: a[:plan.num_parts], data)
+
+
+def remap_buffers(buffers: dict, plan: ElasticPlan) -> dict:
+    """Pad the pipeline staleness state to the survivor layout.
+
+    Feature buffers ``(k?, P, P*slot, w)`` grow on BOTH the partition
+    axis and the peer-major halo axis (pad peers append ``pad*slot``
+    zero rows at the end — real halo offsets are untouched); gradient
+    buffers ``(k?, P, max_inner, w)`` grow on the partition axis; the
+    ``es`` counters ``(P, 2, L, P)`` grow on both partition axes.
+    """
+    pad = plan.pad_parts
+    if pad == 0:
+        return buffers
+
+    def feat(x):
+        slot = x.shape[-2] // plan.num_parts
+        x = _pad_axis(x, x.ndim - 3, pad)
+        return _pad_axis(x, x.ndim - 2, pad * slot)
+
+    def grad(x):
+        return _pad_axis(x, x.ndim - 3, pad)
+
+    out = {"feat": tuple(feat(b) for b in buffers["feat"]),
+           "grad": tuple(grad(b) for b in buffers["grad"])}
+    if "es" in buffers:
+        out["es"] = _pad_axis(_pad_axis(buffers["es"], 0, pad), 3, pad)
+    return out
+
+
+def unmap_buffers(buffers: dict, plan: ElasticPlan) -> dict:
+    """Inverse of :func:`remap_buffers`: strip pad partitions and pad
+    halo rows, restoring the flat original layout."""
+    p = plan.num_parts
+    if buffers["feat"] and buffers["feat"][0].shape[-3] == p:
+        return buffers
+
+    def feat(x):
+        slot = x.shape[-2] // plan.padded_parts
+        return x[(Ellipsis, slice(0, p), slice(0, p * slot), slice(None))]
+
+    def grad(x):
+        return x[(Ellipsis, slice(0, p), slice(None), slice(None))]
+
+    out = {"feat": tuple(feat(b) for b in buffers["feat"]),
+           "grad": tuple(grad(b) for b in buffers["grad"])}
+    if "es" in buffers:
+        out["es"] = buffers["es"][:p, :, :, :p]
+    return out
+
+
+def warm_mark(buffers: dict, moved, warm: int, num_real: int) -> dict:
+    """Escalate the es counters of every exchange touching a ``moved``
+    partition to at least ``warm`` consecutive fallbacks.
+
+    The restored rows of a remapped partition are checkpoint-old —
+    stale-but-usable, exactly what a ``warm``-deep fallback streak means
+    to the guarded exchange: consumers keep using them, and
+    ``max_staleness`` bounds how much longer they may keep failing
+    before the run aborts. Pads (ids ≥ ``num_real``) are never marked.
+    """
+    if warm <= 0 or not moved or "es" not in buffers:
+        return buffers
+    es = buffers["es"]
+    lead = es.shape[0]
+    m = np.zeros((lead,), bool)
+    m[list(moved)] = True
+    real = np.zeros((lead,), bool)
+    real[:num_real] = True
+    touch = (m[:, None] | m[None, :]) & real[:, None] & real[None, :]
+    touch = jnp.asarray(touch[:, None, None, :])           # (dst, 1, 1, src)
+    stamp = jnp.where(touch, jnp.asarray(warm, es.dtype), 0)
+    return {**buffers, "es": jnp.maximum(es, stamp)}
+
+
+def mask_pad_faults(tables: FaultTables, num_real: int) -> FaultTables:
+    """Zero every compiled fault site whose source or destination is a
+    pad partition (id ≥ ``num_real``) — pads ship all-zero masked
+    payloads, and faulting them would leak spurious es counts into the
+    staleness bookkeeping of a remapped run."""
+
+    def cut(t):
+        return (t.at[..., num_real:, :].set(False)
+                 .at[..., :, num_real:].set(False))
+
+    return tables._replace(drop=cut(tables.drop), corrupt=cut(tables.corrupt))
+
+
+def detect_device_loss(es, n_local: int, num_real: int,
+                       threshold: int = 2) -> int | None:
+    """Scan one step's es counters for a whole-device outage.
+
+    ``es`` is the (padded) ``(P, 2, L, P)`` counter array, ``n_local``
+    the partitions-per-device of the CURRENT layout, ``num_real`` the
+    real (unpadded) partition count. Returns the positional index of the
+    first device whose every forward exchange to every off-device real
+    destination has ≥ ``threshold`` consecutive fallbacks, else None —
+    the min over the device's whole (dst, layer, src) block, so a
+    scattered fault plan (which leaves some exchange healthy) never
+    trips it.
+    """
+    es = np.asarray(es)
+    n_dev = es.shape[0] // n_local
+    for d in range(n_dev):
+        srcs = [p for p in range(d * n_local, (d + 1) * n_local)
+                if p < num_real]
+        dsts = [q for q in range(num_real) if q // n_local != d]
+        if not srcs or not dsts:
+            continue
+        sub = es[np.ix_(dsts)][:, FWD][..., srcs]      # (dst, L, src)
+        if sub.size and int(sub.min()) >= threshold:
+            return d
+    return None

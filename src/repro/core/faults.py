@@ -29,6 +29,18 @@ Semantics of the three fault kinds:
              arrival and the observable effect equals ``drop`` for that
              step; ``compile`` lowers it accordingly.
 
+``device_down`` a whole DEVICE disappears: ``src`` names a device (not a
+             partition) and the site lowers to persistent drops of every
+             exchange leaving that device's partitions toward any
+             off-device partition, both directions, every layer, for
+             steps ``[step, until)`` (``until=None`` = never returns).
+             This is the deterministic drill plane of the elastic
+             runtime (repro.core.elastic): the guarded receiver sees a
+             blanket fallback row for the device, which is exactly what
+             a real device loss looks like from the survivors' side.
+             ``compile`` needs ``parts_per_device`` to expand the device
+             id to its partition block.
+
 The flip streams are keyed by (seed, step, direction, layer, SOURCE
 partition), so the injected bytes are identical across backends and
 device layouts — a degraded sim run and a degraded SPMD run see the same
@@ -48,7 +60,7 @@ from repro.core.codec import byteify, unbyteify
 #: Direction indices of the fault tables (axis 1).
 FWD, BWD = 0, 1
 
-KINDS = ("drop", "corrupt", "delay")
+KINDS = ("drop", "corrupt", "delay", "device_down")
 DIRECTIONS = ("fwd", "bwd")
 
 
@@ -75,7 +87,13 @@ class FaultTables(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class FaultSite:
     """One declarative fault: drop/corrupt/delay the (src -> dst) payload
-    of ``layer`` in ``direction`` ("fwd"/"bwd") at ``step``."""
+    of ``layer`` in ``direction`` ("fwd"/"bwd") at ``step``.
+
+    ``kind="device_down"`` reinterprets ``src`` as a DEVICE id and holds
+    from ``step`` until ``until`` (exclusive; None = permanent); its
+    ``layer``/``dst``/``direction`` are ignored — the outage blankets
+    every exchange leaving the device (see :func:`device_down_site`).
+    """
 
     step: int
     layer: int
@@ -83,6 +101,7 @@ class FaultSite:
     dst: int
     direction: str = "fwd"
     kind: str = "drop"
+    until: int | None = None
 
     def __post_init__(self):
         if self.direction not in DIRECTIONS:
@@ -91,6 +110,22 @@ class FaultSite:
         if self.kind not in KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"have {KINDS}")
+        if self.until is not None:
+            if self.kind != "device_down":
+                raise ValueError(
+                    f"until= is only meaningful for kind='device_down' "
+                    f"(got kind={self.kind!r}) — point faults last one step")
+            if self.until <= self.step:
+                raise ValueError(
+                    f"until={self.until} must be > step={self.step}")
+
+
+def device_down_site(step: int, device: int,
+                     until: int | None = None) -> FaultSite:
+    """A whole-device outage site: device ``device`` drops every outbound
+    exchange for steps ``[step, until)`` (None = never comes back)."""
+    return FaultSite(step=step, layer=0, src=device, dst=0,
+                     kind="device_down", until=until)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +160,27 @@ class FaultPlan:
         """True when the plan injects nothing at any step."""
         return not self.sites and self.rate == 0.0
 
-    def compile(self, num_steps: int, num_layers: int,
-                num_parts: int) -> FaultTables:
+    def downed_devices(self, step: int) -> frozenset:
+        """Device ids whose ``device_down`` window covers ``step`` — the
+        health oracle the elastic trainer's rejoin decision consults."""
+        return frozenset(
+            s.src for s in self.sites
+            if s.kind == "device_down" and s.step <= step
+            and (s.until is None or step < s.until))
+
+    def without_device_down(self) -> "FaultPlan":
+        """This plan minus its device_down sites — what remains to inject
+        after the elastic runtime has remapped the outage away."""
+        return dataclasses.replace(
+            self, sites=tuple(s for s in self.sites
+                              if s.kind != "device_down"))
+
+    def compile(self, num_steps: int, num_layers: int, num_parts: int,
+                parts_per_device: int = 1) -> FaultTables:
         """Lower the plan to dense boolean tables over a ``num_steps``
-        horizon ("delay" lowers to "drop" — see the module docstring)."""
+        horizon ("delay" lowers to "drop"; "device_down" lowers to
+        persistent cross-device drops over the device's
+        ``parts_per_device`` partition block — see the module docstring)."""
         shape = (max(num_steps, 1), 2, num_layers, num_parts, num_parts)
         drop = np.zeros(shape, bool)
         corrupt = np.zeros(shape, bool)
@@ -143,6 +195,27 @@ class FaultPlan:
             mask[:, BWD, 0] = False
             (corrupt if self.rate_kind == "corrupt" else drop)[:] = mask
         for s in self.sites:
+            if s.kind == "device_down":
+                if num_parts % parts_per_device:
+                    raise ValueError(
+                        f"num_parts={num_parts} is not a multiple of "
+                        f"parts_per_device={parts_per_device}")
+                n_dev = num_parts // parts_per_device
+                if not 0 <= s.src < n_dev:
+                    raise ValueError(
+                        f"device_down site device {s.src} out of range for "
+                        f"{n_dev} devices: {s}")
+                lo = max(s.step, 0)
+                hi = num_steps if s.until is None else min(s.until, num_steps)
+                if lo >= hi:
+                    continue
+                on = np.zeros((num_parts,), bool)
+                on[s.src * parts_per_device:(s.src + 1) * parts_per_device] \
+                    = True
+                # outbound only: the dead device's own (never-consumed)
+                # inbound state is irrelevant to the survivors
+                drop[lo:hi] |= np.outer(on, ~on)[None, None]
+                continue
             if not (0 <= s.layer < num_layers and 0 <= s.src < num_parts
                     and 0 <= s.dst < num_parts):
                 raise ValueError(f"fault site out of range: {s}")

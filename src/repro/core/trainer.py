@@ -6,6 +6,8 @@ convergence experiments (paper Tab. 4 / Fig. 4/9 analogues).
 from __future__ import annotations
 
 import dataclasses
+import signal
+import threading
 import time
 from typing import Callable
 
@@ -13,7 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import elastic as elastic_mod
 from repro.core.config import ModelConfig, PipeConfig
+from repro.core.elastic import ElasticConfig, ElasticPlan
 from repro.core.faults import FaultPlan, StalenessExceededError
 from repro.core.health import (HealthConfig, TrainingAnomalyError,
                                health_check, tree_select)
@@ -28,8 +32,11 @@ class TrainResult:
     parameters, the last metric dict, the wall-clock epoch rate, the
     health/guard anomaly counters (skipped_steps, max_consecutive,
     exchange_fallbacks, max_effective_staleness — the latter two only
-    under `guard_exchange`), and the checkpoint step the run resumed
-    from (None for a fresh run)."""
+    under `guard_exchange`; device_losses/rejoins under an enabled
+    ElasticConfig), the checkpoint step the run resumed from (None for a
+    fresh run), how many elastic device-loss recoveries ran, and whether
+    the run exited early on a SIGTERM/SIGINT (`preempted`, after writing
+    a final checkpoint)."""
 
     history: dict          # lists: loss, val_acc, test_acc, epoch_time
     params: dict
@@ -37,6 +44,8 @@ class TrainResult:
     epochs_per_sec: float
     anomalies: dict = dataclasses.field(default_factory=dict)
     resumed_from: int | None = None
+    recoveries: int = 0
+    preempted: bool = False
 
 
 def make_jitted_train_step(model: PipeGCN, opt: Optimizer,
@@ -134,7 +143,9 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
                   health: HealthConfig | None = None,
                   faults: FaultPlan | None = None,
                   ckpt_dir: str | None = None, checkpoint_every: int = 0,
-                  resume: bool = False) -> TrainResult:
+                  resume: bool = False, checkpoint_keep: int | None = None,
+                  elastic: ElasticConfig | None = None,
+                  elastic_plan: ElasticPlan | None = None) -> TrainResult:
     """Reference training loop. With `mesh=None` the step runs on the sim
     backend (single device, partitions vmapped); passing a mesh runs the
     same model under shard_map — partitions need only be a multiple of the
@@ -154,7 +165,31 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
         every N epochs; `resume=True` restores the latest checkpoint and
         continues BIT-EXACTLY (the saved key is the already-advanced
         split chain, so the resumed run draws the same subkeys an
-        uninterrupted run would)."""
+        uninterrupted run would). `checkpoint_keep` prunes all but the
+        newest N committed checkpoints after each save.
+
+    Elasticity (ISSUE 10, repro.core.elastic):
+      * `elastic` — an enabled ElasticConfig arms device-loss detection
+        (requires `pipe_cfg.guard_exchange`): once every forward exchange
+        out of one device has fallen back `detect_after` consecutive
+        steps, the trainer restores the latest checkpoint, remaps the
+        lost device's partitions onto the survivors (padded idle slots
+        for uneven fits), warm-marks the remapped exchanges with
+        `warm_staleness` es counts, rebuilds the mesh/step, and resumes —
+        then scales back up at a checkpoint boundary once the device is
+        healthy (`rejoin`). Checkpoints are ALWAYS written in the flat
+        original layout, so any device count can restore them.
+      * `elastic_plan` — start directly on a survivor layout (a fresh
+        launch at the smaller device count, e.g. after a crash): with
+        `resume=True` this routes through the same restore → remap →
+        warm-mark path as a mid-run recovery, which makes the two
+        bitwise identical from the shared checkpoint on. On a mesh
+        backend, pass the matching `launch.mesh.make_survivor_mesh(plan)`
+        as `mesh`.
+
+    Preemption: SIGTERM/SIGINT (main thread only) finishes the in-flight
+    epoch, writes a final checkpoint (when checkpointing is configured),
+    and returns cleanly with `TrainResult.preempted=True`."""
     split = pipeline.split_spec() if hasattr(pipeline, "split_spec") else None
     model = PipeGCN(model_cfg, pipe_cfg, split=split)
     topo = pipeline.topo
@@ -223,43 +258,128 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
     if health is None:
         health = HealthConfig()
     hc = health if health.enabled else None
+
+    P = topo.num_parts
+    el_on = elastic is not None and elastic.enabled
+    if elastic_plan is not None and not el_on:
+        raise ValueError("elastic_plan requires an enabled ElasticConfig "
+                         "(pass elastic=ElasticConfig(...))")
+    if el_on:
+        if not pipe_cfg.guard_exchange:
+            raise ValueError(
+                "the elastic runtime detects device loss through the "
+                "guarded exchange's es counters; set "
+                "PipeConfig.guard_exchange=True")
+        if (pipe_cfg.staleness_steps + elastic.detect_after
+                > pipe_cfg.max_staleness):
+            raise ValueError(
+                f"elastic detect_after={elastic.detect_after} can never "
+                f"fire: staleness_steps={pipe_cfg.staleness_steps} + "
+                f"detect_after exceeds max_staleness="
+                f"{pipe_cfg.max_staleness}, so the run would abort first")
+    plan = elastic_plan
+    if plan is not None and plan.num_parts != P:
+        raise ValueError(f"elastic_plan remaps {plan.num_parts} partitions "
+                         f"but the pipeline has {P}")
+    # original device granularity: what "one device" means to the
+    # device_down fault plane and the loss detector
+    if plan is not None:
+        orig_devices = plan.orig_devices
+    elif mesh is not None:
+        orig_devices = int(mesh.devices.size)
+    elif el_on:
+        orig_devices = P // elastic.parts_per_device
+    else:
+        orig_devices = P
+    if orig_devices < 1 or P % orig_devices:
+        raise ValueError(
+            f"num_parts={P} is not a multiple of the device count "
+            f"{orig_devices}")
+    orig_ppd = P // orig_devices
+
     params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)
-    buffers = model.init_buffers(topo)
-    step = (make_spmd_train_step(model, opt, mesh, topo, axis_name,
-                                 health=hc)
-            if mesh is not None
-            else make_jitted_train_step(model, opt, health=hc))
+    mesh0 = mesh
+    topo_run, train_run, val_run = topo, pipeline.train_data, pipeline.val_data
+    if plan is not None:
+        if mesh is not None and int(mesh.devices.size) != plan.n_devices:
+            raise ValueError(
+                f"mesh has {int(mesh.devices.size)} devices but the plan's "
+                f"survivor set has {plan.n_devices} — pass "
+                "launch.mesh.make_survivor_mesh(plan)")
+        topo_run = elastic_mod.remap_topology(topo, plan)
+        train_run = elastic_mod.remap_data(pipeline.train_data, plan)
+        val_run = elastic_mod.remap_data(pipeline.val_data, plan)
+    buffers = model.init_buffers(topo_run)
+
+    def build_step(m, t):
+        return (make_spmd_train_step(model, opt, m, t, axis_name, health=hc)
+                if m is not None
+                else make_jitted_train_step(model, opt, health=hc))
+
+    step = build_step(mesh, topo_run)
     fwd = jax.jit(lambda t, p, d: model.forward(t, p, d)[1])
 
-    tables = None
-    if faults is not None and not faults.is_empty():
-        tables = faults.compile(epochs, model_cfg.num_layers, topo.num_parts)
-        if log:
-            n = int(np.asarray(tables.drop).sum() +
-                    np.asarray(tables.corrupt).sum())
-            log(f"fault injection: {n} faulted exchange sites over "
-                f"{epochs} epochs"
-                + (", guard_exchange ON (checksum + stale fallback)"
-                   if pipe_cfg.guard_exchange else
-                   ", guard_exchange OFF (faults land undetected)"))
+    def build_tables(active_plan):
+        # with a plan active the lost device is already remapped away, so
+        # its device_down sites are moot; pad partitions never carry real
+        # faults (mask_pad_faults) — their idle wires must stay valid
+        if faults is None or faults.is_empty():
+            return None
+        fp = faults if active_plan is None else faults.without_device_down()
+        if fp.is_empty():
+            return None
+        if active_plan is None:
+            return fp.compile(epochs, model_cfg.num_layers, P,
+                              parts_per_device=orig_ppd)
+        tab = fp.compile(epochs, model_cfg.num_layers,
+                         active_plan.padded_parts,
+                         parts_per_device=active_plan.n_local)
+        return elastic_mod.mask_pad_faults(tab, P)
+
+    tables = build_tables(plan)
+    if tables is not None and log:
+        n = int(np.asarray(tables.drop).sum() +
+                np.asarray(tables.corrupt).sum())
+        log(f"fault injection: {n} faulted exchange sites over "
+            f"{epochs} epochs"
+            + (", guard_exchange ON (checksum + stale fallback)"
+               if pipe_cfg.guard_exchange else
+               ", guard_exchange OFF (faults land undetected)"))
 
     key = jax.random.PRNGKey(seed + 1)
     start_epoch = 0
     resumed_from = None
+
+    def flat_template():
+        # checkpoints are ALWAYS written in the flat original layout
+        # (remapped runs unmap before saving), so one template serves
+        # every device count
+        return {"params": params, "opt_state": opt_state,
+                "buffers": model.init_buffers(topo), "key": key,
+                "epoch": jnp.zeros((), jnp.int32)}
+
+    def apply_plan_state(flat_bufs, p):
+        # the ONE restore → remap → warm-mark path shared by mid-run
+        # recovery and a fresh survivor-layout launch: routing both
+        # through it is what makes them bitwise identical
+        b = elastic_mod.remap_buffers(flat_bufs, p)
+        return elastic_mod.warm_mark(b, p.moved_partitions(),
+                                     elastic.warm_staleness if el_on else 0,
+                                     P)
+
     if resume:
         if not ckpt_dir:
             raise ValueError("resume=True requires ckpt_dir")
         from repro.checkpoint import latest_step, restore_checkpoint
         last = latest_step(ckpt_dir)
         if last is not None:
-            template = {"params": params, "opt_state": opt_state,
-                        "buffers": buffers, "key": key,
-                        "epoch": jnp.zeros((), jnp.int32)}
-            state = restore_checkpoint(ckpt_dir, last, template)
+            state = restore_checkpoint(ckpt_dir, last, flat_template())
             params, opt_state = state["params"], state["opt_state"]
-            buffers, key = state["buffers"], state["key"]
+            key = state["key"]
+            buffers = (apply_plan_state(state["buffers"], plan)
+                       if plan is not None else state["buffers"])
             start_epoch = int(state["epoch"])
             resumed_from = last
             if log:
@@ -270,71 +390,213 @@ def train_pipegcn(pipeline, model_cfg: ModelConfig,
     if pipe_cfg.guard_exchange:
         anomalies["exchange_fallbacks"] = 0
         anomalies["max_effective_staleness"] = pipe_cfg.staleness_steps
+    if el_on:
+        anomalies["device_losses"] = []
+        anomalies["rejoins"] = 0
+
+    def save_state(step_no):
+        from repro.checkpoint import save_checkpoint
+        # the saved key is ALREADY advanced past this epoch's split,
+        # so a resumed run continues the exact subkey sequence
+        flat = (elastic_mod.unmap_buffers(buffers, plan)
+                if plan is not None else buffers)
+        save_checkpoint(ckpt_dir, step_no, {
+            "params": params, "opt_state": opt_state, "buffers": flat,
+            "key": key, "epoch": jnp.asarray(step_no, jnp.int32)},
+            keep_last=checkpoint_keep)
+        return flat
+
+    def device_back(at_step):
+        lost = set(range(orig_devices)) - set(plan.survivors)
+        if faults is not None and faults.downed_devices(at_step) & lost:
+            return False
+        if mesh0 is not None and len(jax.devices()) < int(mesh0.devices.size):
+            return False
+        return True
+
+    stop_signals: list = []
+    sig_handlers = {}
+    if threading.current_thread() is threading.main_thread():
+        for signum in (signal.SIGTERM, signal.SIGINT):
+            try:
+                sig_handlers[signum] = signal.signal(
+                    signum, lambda s, _f: stop_signals.append(s))
+            except (ValueError, OSError):
+                pass
+
     consec = 0
+    recoveries = 0
+    preempted = False
+    cur_survivors = (plan.survivors if plan is not None
+                     else tuple(range(orig_devices)))
+    cur_n_local = plan.n_local if plan is not None else orig_ppd
     last_metric, last_metric_epoch = None, -1
     history = {"loss": [], "val_acc": [], "test_acc": [], "epoch": []}
     t0 = time.perf_counter()
-    for epoch in range(start_epoch, epochs):
-        key, sub = jax.random.split(key)
-        if tables is not None:
-            out = step(topo, params, opt_state, buffers,
-                       pipeline.train_data, sub,
-                       jnp.asarray(epoch, jnp.int32), tables)
-        else:
-            out = step(topo, params, opt_state, buffers,
-                       pipeline.train_data, sub)
-        if hc is not None:
-            loss, params, opt_state, buffers, rep = out
-            if not bool(rep["ok"]):
-                anomalies["skipped_steps"] += 1
-                consec += 1
-                anomalies["max_consecutive"] = max(
-                    anomalies["max_consecutive"], consec)
-                if consec >= hc.max_consecutive_anomalies:
-                    raise TrainingAnomalyError(
-                        f"{consec} consecutive unhealthy training steps "
-                        f"(epoch {epoch}, loss {float(loss)}, grad norm "
-                        f"{float(rep['grad_norm'])}); aborting instead of "
-                        "spinning on a poisoned run")
-            else:
+    epoch = start_epoch
+    try:
+        while epoch < epochs:
+            try:
+                key, sub = jax.random.split(key)
+                if tables is not None:
+                    out = step(topo_run, params, opt_state, buffers,
+                               train_run, sub,
+                               jnp.asarray(epoch, jnp.int32), tables)
+                else:
+                    out = step(topo_run, params, opt_state, buffers,
+                               train_run, sub)
+                if hc is not None:
+                    loss, params, opt_state, buffers, rep = out
+                    if not bool(rep["ok"]):
+                        anomalies["skipped_steps"] += 1
+                        consec += 1
+                        anomalies["max_consecutive"] = max(
+                            anomalies["max_consecutive"], consec)
+                        if consec >= hc.max_consecutive_anomalies:
+                            raise TrainingAnomalyError(
+                                f"{consec} consecutive unhealthy training "
+                                f"steps (epoch {epoch}, loss {float(loss)}, "
+                                f"grad norm {float(rep['grad_norm'])}); "
+                                "aborting instead of spinning on a "
+                                "poisoned run")
+                    else:
+                        consec = 0
+                else:
+                    loss, params, opt_state, buffers = out
+                if pipe_cfg.guard_exchange:
+                    es_host = np.asarray(buffers["es"])
+                    if el_on:
+                        # device loss pre-empts the staleness abort: a
+                        # blanket whole-device fallback row is an outage
+                        # to recover from, not a contract violation
+                        down = elastic_mod.detect_device_loss(
+                            es_host, cur_n_local, P, elastic.detect_after)
+                        if down is not None:
+                            dev = (cur_survivors[down] if plan is not None
+                                   else down)
+                            rest = tuple(s for s in cur_survivors
+                                         if s != dev)
+                            raise elastic_mod.DeviceLossError(
+                                f"device {dev} detected down at epoch "
+                                f"{epoch}: every forward exchange out of "
+                                f"it has fallen back >= "
+                                f"{elastic.detect_after} consecutive steps",
+                                dev, rest, epoch)
+                    _check_staleness(es_host, pipe_cfg, anomalies, epoch)
+                if epoch % eval_every == 0 or epoch == epochs - 1:
+                    logits = fwd(topo_run, params, val_run)
+                    m = pipeline.metric(logits)
+                    last_metric, last_metric_epoch = m, epoch
+                    history["loss"].append(float(loss))
+                    history["val_acc"].append(m["val"])
+                    history["test_acc"].append(m["test"])
+                    history["epoch"].append(epoch)
+                    if log:
+                        line = (f"epoch {epoch:5d} loss {float(loss):.4f} "
+                                f"val {m['val']:.4f} test {m['test']:.4f}")
+                        if anomalies["skipped_steps"]:
+                            line += f" anomalies {anomalies['skipped_steps']}"
+                        if (pipe_cfg.guard_exchange
+                                and anomalies["exchange_fallbacks"]):
+                            line += (
+                                f" fallbacks {anomalies['exchange_fallbacks']}"
+                                f" es {anomalies['max_effective_staleness']}"
+                                f"/{pipe_cfg.max_staleness}")
+                        log(line)
+                saved = False
+                if (ckpt_dir and checkpoint_every
+                        and (epoch + 1) % checkpoint_every == 0):
+                    flat = save_state(epoch + 1)
+                    saved = True
+                    if (plan is not None and el_on and elastic.rejoin
+                            and device_back(epoch + 1)):
+                        # rejoin: the just-saved flat state IS the live
+                        # state unmapped — resume it on the full device
+                        # count, warm-marking the partitions moving home
+                        moved = plan.moved_partitions()
+                        buffers = elastic_mod.warm_mark(
+                            flat, moved, elastic.warm_staleness, P)
+                        topo_run, train_run, val_run = (
+                            topo, pipeline.train_data, pipeline.val_data)
+                        plan = None
+                        cur_survivors = tuple(range(orig_devices))
+                        cur_n_local = orig_ppd
+                        if mesh0 is not None:
+                            step = build_step(mesh0, topo_run)
+                        tables = build_tables(None)
+                        anomalies["rejoins"] += 1
+                        if log:
+                            log(f"rejoin: scaled back up to {orig_devices} "
+                                f"devices at checkpoint step {epoch + 1} "
+                                f"({len(moved)} partitions warm-marked)")
+                if stop_signals:
+                    if ckpt_dir and checkpoint_every and not saved:
+                        save_state(epoch + 1)
+                    preempted = True
+                    if log:
+                        log(f"preempted (signal {int(stop_signals[0])}): "
+                            f"epoch {epoch} finished, final checkpoint "
+                            "written, exiting cleanly")
+                    break
+                epoch += 1
+            except elastic_mod.DeviceLossError as err:
+                if not el_on:
+                    raise
+                if recoveries >= elastic.max_recoveries:
+                    raise
+                if not ckpt_dir:
+                    raise RuntimeError(
+                        "elastic recovery needs a checkpoint to restore "
+                        "from — run with ckpt_dir + checkpoint_every"
+                    ) from err
+                from repro.checkpoint import latest_step, restore_checkpoint
+                last = latest_step(ckpt_dir)
+                if last is None:
+                    raise RuntimeError(
+                        "device lost before the first checkpoint landed — "
+                        "nothing to recover from") from err
+                if not err.survivors:
+                    raise RuntimeError(
+                        "no surviving devices to remap onto") from err
+                plan = ElasticPlan(num_parts=P, orig_devices=orig_devices,
+                                   survivors=err.survivors)
+                state = restore_checkpoint(ckpt_dir, last, flat_template())
+                params, opt_state = state["params"], state["opt_state"]
+                key = state["key"]
+                buffers = apply_plan_state(state["buffers"], plan)
+                epoch = int(state["epoch"])
+                topo_run = elastic_mod.remap_topology(topo, plan)
+                train_run = elastic_mod.remap_data(pipeline.train_data, plan)
+                val_run = elastic_mod.remap_data(pipeline.val_data, plan)
+                cur_survivors = plan.survivors
+                cur_n_local = plan.n_local
+                if mesh0 is not None:
+                    from repro.launch.mesh import make_survivor_mesh
+                    step = build_step(make_survivor_mesh(plan, axis_name),
+                                      topo_run)
+                tables = build_tables(plan)
+                recoveries += 1
                 consec = 0
-        else:
-            loss, params, opt_state, buffers = out
-        if pipe_cfg.guard_exchange:
-            _check_staleness(buffers["es"], pipe_cfg, anomalies, epoch)
-        if epoch % eval_every == 0 or epoch == epochs - 1:
-            logits = fwd(topo, params, pipeline.val_data)
-            m = pipeline.metric(logits)
-            last_metric, last_metric_epoch = m, epoch
-            history["loss"].append(float(loss))
-            history["val_acc"].append(m["val"])
-            history["test_acc"].append(m["test"])
-            history["epoch"].append(epoch)
-            if log:
-                line = (f"epoch {epoch:5d} loss {float(loss):.4f} "
-                        f"val {m['val']:.4f} test {m['test']:.4f}")
-                if anomalies["skipped_steps"]:
-                    line += f" anomalies {anomalies['skipped_steps']}"
-                if pipe_cfg.guard_exchange and anomalies["exchange_fallbacks"]:
-                    line += (f" fallbacks {anomalies['exchange_fallbacks']}"
-                             f" es {anomalies['max_effective_staleness']}"
-                             f"/{pipe_cfg.max_staleness}")
-                log(line)
-        if (ckpt_dir and checkpoint_every
-                and (epoch + 1) % checkpoint_every == 0):
-            from repro.checkpoint import save_checkpoint
-            # the saved key is ALREADY advanced past this epoch's split,
-            # so a resumed run continues the exact subkey sequence
-            save_checkpoint(ckpt_dir, epoch + 1, {
-                "params": params, "opt_state": opt_state,
-                "buffers": buffers, "key": key,
-                "epoch": jnp.asarray(epoch + 1, jnp.int32)})
+                anomalies["device_losses"].append({
+                    "device": err.device, "detected_epoch": err.epoch,
+                    "resumed_from": int(last),
+                    "survivors": list(plan.survivors)})
+                if log:
+                    log(f"device {err.device} lost at epoch {err.epoch}: "
+                        f"remapped {P} partitions onto survivors "
+                        f"{list(plan.survivors)} ({plan.n_local}/device, "
+                        f"{plan.pad_parts} pad), restored checkpoint step "
+                        f"{last}, resuming at epoch {epoch}")
+    finally:
+        for signum, h in sig_handlers.items():
+            signal.signal(signum, h)
     dt = time.perf_counter() - t0
     if last_metric_epoch == epochs - 1:
         final = last_metric    # the last epoch already ran this eval
     else:
-        final = pipeline.metric(fwd(topo, params, pipeline.val_data))
+        final = pipeline.metric(fwd(topo_run, params, val_run))
     ran = max(epochs - start_epoch, 0)
     return TrainResult(history=history, params=params, final_metrics=final,
                        epochs_per_sec=ran / dt if dt > 0 and ran else 0.0,
-                       anomalies=anomalies, resumed_from=resumed_from)
+                       anomalies=anomalies, resumed_from=resumed_from,
+                       recoveries=recoveries, preempted=preempted)

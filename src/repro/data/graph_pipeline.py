@@ -127,11 +127,24 @@ class GraphDataPipeline:
         data = ShardedData(*to_local_layout(tuple(self.train_data), n_local))
         return topo, data
 
+    def elastic_views(self, plan):
+        """Remapped (topo, train_data, val_data) for an
+        `repro.core.elastic.ElasticPlan` — the padded survivor layout of
+        this pipeline's device arrays (pads appended and masked out; the
+        partitioned graph is NOT rebuilt)."""
+        from repro.core.elastic import remap_data, remap_topology
+        return (remap_topology(self.topo, plan),
+                remap_data(self.train_data, plan),
+                remap_data(self.val_data, plan))
+
     def metric(self, logits_packed) -> dict:
         """Global accuracy (single-label) or F1-micro (multilabel) on
-        train/val/test splits, computed from packed (P, max_inner, C) logits."""
+        train/val/test splits, computed from packed (P, max_inner, C)
+        logits. Logits from an elastically remapped run carry extra pad
+        partitions; only the real leading `num_parts` rows are unpacked."""
         ds = self.dataset
-        logits = self.pg.unpack_nodes(np.asarray(logits_packed))
+        logits = self.pg.unpack_nodes(
+            np.asarray(logits_packed)[:self.pg.num_parts])
         out = {}
         for split, mask in (("train", ds.train_mask), ("val", ds.val_mask),
                             ("test", ds.test_mask)):

@@ -71,6 +71,27 @@ def make_partition_mesh(num_parts: int, parts_per_device: int = 1,
     return make_mesh((n_dev,), (axis,), devices=jax.devices()[:n_dev])
 
 
+def make_survivor_mesh(plan, axis: str = "parts"):
+    """1-D mesh over an ElasticPlan's surviving devices.
+
+    When the survivor ids address devices the platform still exposes
+    (the drill case: a *logical* loss on healthy hardware), the mesh is
+    built from exactly those devices — deterministic, so a mid-run
+    recovery and a fresh launch on the survivors pick identical
+    hardware. Otherwise (the device really is gone and the remainder
+    renumbered) the first ``plan.n_devices`` available devices serve."""
+    devs = jax.devices()
+    if plan.survivors[-1] < len(devs):
+        sel = [devs[i] for i in plan.survivors]
+    else:
+        sel = devs[:plan.n_devices]
+    if len(sel) < plan.n_devices:
+        raise ValueError(
+            f"survivor mesh needs {plan.n_devices} devices but only "
+            f"{len(devs)} are available")
+    return make_mesh((plan.n_devices,), (axis,), devices=sel)
+
+
 # Hardware constants for the roofline model (TPU v5e).
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -64,13 +64,23 @@ def run_gcn(args) -> dict:
     if args.no_health:
         from repro.core import HealthConfig
         health = HealthConfig(enabled=False)
+    elastic = None
+    if args.elastic:
+        from repro.core import ElasticConfig
+        elastic = ElasticConfig(detect_after=args.elastic_detect_after,
+                                warm_staleness=args.elastic_warm,
+                                max_recoveries=args.elastic_max_recoveries,
+                                rejoin=not args.elastic_no_rejoin,
+                                parts_per_device=args.parts_per_device)
     res = train_pipegcn(pipeline, mc, pc, epochs=args.epochs,
                         lr=args.lr or tpl["lr"], seed=args.seed,
                         eval_every=args.eval_every, log=print, mesh=mesh,
                         health=health, faults=faults,
                         ckpt_dir=args.ckpt_dir,
                         checkpoint_every=args.ckpt_every,
-                        resume=args.resume)
+                        resume=args.resume,
+                        checkpoint_keep=args.ckpt_keep or None,
+                        elastic=elastic)
     out = {"workload": "gcn", "dataset": args.dataset,
            "partitions": args.partitions, "variant": args.variant,
            "spmd": bool(args.spmd),
@@ -85,8 +95,11 @@ def run_gcn(args) -> dict:
            "guard_exchange": pc.guard_exchange,
            "fault_rate": args.fault_rate,
            "split_feasible": pipeline.split_spec() is not None,
+           "elastic": bool(args.elastic),
            "anomalies": res.anomalies,
            "resumed_from": res.resumed_from,
+           "recoveries": res.recoveries,
+           "preempted": res.preempted,
            "final": res.final_metrics, "epochs_per_sec": res.epochs_per_sec,
            "history": res.history}
     if args.ckpt_dir and not args.ckpt_every:
@@ -217,6 +230,28 @@ def main():
                     choices=["drop", "corrupt", "delay"],
                     help="background fault kind for --fault-rate")
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--elastic", action="store_true",
+                    help="arm the elastic runtime (requires "
+                         "--guard-exchange and --ckpt-every): a device "
+                         "whose every forward exchange falls back "
+                         "--elastic-detect-after consecutive steps is "
+                         "declared lost; the trainer restores the latest "
+                         "checkpoint, remaps its partitions onto the "
+                         "survivors, and resumes — see docs/architecture.md "
+                         "'Elasticity'")
+    ap.add_argument("--elastic-detect-after", type=int, default=2,
+                    help="consecutive whole-device fallback steps before a "
+                         "device is declared lost")
+    ap.add_argument("--elastic-warm", type=int, default=1,
+                    help="staleness count stamped on remapped exchanges at "
+                         "recovery (must be < --elastic-detect-after)")
+    ap.add_argument("--elastic-max-recoveries", type=int, default=2,
+                    help="device-loss recovery budget before the loss is "
+                         "re-raised as fatal")
+    ap.add_argument("--elastic-no-rejoin", action="store_true",
+                    help="stay on the survivor layout instead of scaling "
+                         "back up at a checkpoint boundary once the lost "
+                         "device is healthy")
     ap.add_argument("--no-health", action="store_true",
                     help="disable the numerical health guard (skip-and-"
                          "rollback of non-finite steps; on by default)")
@@ -239,6 +274,9 @@ def main():
                     help="checkpoint the FULL training state (params, "
                          "optimizer, pipeline buffers, PRNG key, epoch) "
                          "into --ckpt-dir every N epochs (atomic saves)")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="retain only the newest N committed checkpoints "
+                         "in --ckpt-dir (0 = keep everything)")
     ap.add_argument("--resume", action="store_true",
                     help="resume bit-exactly from the latest checkpoint "
                          "in --ckpt-dir (gcn workload)")

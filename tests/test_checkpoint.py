@@ -124,6 +124,171 @@ def test_restore_missing_dir(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# retry + retention (ISSUE 10 satellites)
+# ---------------------------------------------------------------------------
+
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    """A twice-flaky os.replace (transient filesystem error) still lands a
+    complete, restorable checkpoint on the third attempt — and the retries
+    restage from scratch, so nothing torn is ever visible."""
+    import repro.checkpoint.checkpoint as ckpt_mod
+    real_replace = os.replace
+    fails = {"n": 0}
+
+    def flaky(src, dst):
+        if fails["n"] < 2:
+            fails["n"] += 1
+            raise OSError("injected transient failure")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ckpt_mod.os, "replace", flaky)
+    monkeypatch.setattr(ckpt_mod.time, "sleep", lambda _s: None)
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"w": jnp.arange(3.0)})
+    assert fails["n"] == 2
+    assert latest_step(d) == 1
+    got = restore_checkpoint(d, 1, {"w": jnp.zeros(3)})
+    assert (np.asarray(got["w"]) == np.arange(3.0)).all()
+
+
+def test_save_retry_budget_exhausts(tmp_path, monkeypatch):
+    """Permanent failure: the original OSError surfaces after `retries`
+    attempts and no committed step dir exists."""
+    import repro.checkpoint.checkpoint as ckpt_mod
+    calls = {"n": 0}
+
+    def broken(_src, _dst):
+        calls["n"] += 1
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(ckpt_mod.os, "replace", broken)
+    monkeypatch.setattr(ckpt_mod.time, "sleep", lambda _s: None)
+    with pytest.raises(OSError, match="disk on fire"):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)}, retries=3)
+    assert calls["n"] == 3
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_save_does_not_retry_fileexists(tmp_path, monkeypatch):
+    """FileExistsError under overwrite=False is a caller error, not a
+    transient fault: exactly one attempt, no sleeping."""
+    import repro.checkpoint.checkpoint as ckpt_mod
+
+    def no_sleep(_s):
+        raise AssertionError("must not back off on FileExistsError")
+
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)})
+    monkeypatch.setattr(ckpt_mod.time, "sleep", no_sleep)
+    with pytest.raises(FileExistsError):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)},
+                        overwrite=False)
+
+
+def test_keep_last_prunes_committed_only(tmp_path):
+    """keep_last retention: oldest committed dirs go, the newest N stay,
+    interleaved `.tmp` staging leftovers neither count toward the budget
+    nor shadow `latest_step`, and orphan `.tmp`s of SURVIVING steps are
+    left alone (a concurrent save may own them)."""
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        save_checkpoint(d, s, {"w": jnp.full((2,), float(s))})
+    # interleaved staging leftovers: one for a pruned step, one orphan
+    os.makedirs(os.path.join(d, "step_00000001.tmp"))
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))
+    save_checkpoint(d, 4, {"w": jnp.full((2,), 4.0)}, keep_last=2)
+    names = set(os.listdir(d))
+    assert names == {"step_00000003", "step_00000004",
+                     "step_00000007.tmp"}, names
+    assert latest_step(d) == 4
+    got = restore_checkpoint(d, None, {"w": jnp.zeros(2)})
+    assert (np.asarray(got["w"]) == 4.0).all()
+
+
+def test_keep_last_never_prunes_just_written(tmp_path):
+    """Even a save whose step number sorts OLDEST keeps its own dir —
+    pruning must never eat the checkpoint that was just committed."""
+    d = str(tmp_path)
+    for s in (5, 6):
+        save_checkpoint(d, s, {"w": jnp.zeros(1)})
+    save_checkpoint(d, 2, {"w": jnp.ones(1)}, keep_last=1)
+    names = {n for n in os.listdir(d) if n.startswith("step_")}
+    assert "step_00000002" in names
+    with pytest.raises(ValueError, match="keep_last"):
+        save_checkpoint(d, 9, {"w": jnp.zeros(1)}, keep_last=0)
+
+
+def test_trainer_checkpoint_keep(tmp_path, pipeline):
+    """checkpoint_keep threads through the trainer loop: only the newest
+    N step dirs survive a run, and the retained latest restores."""
+    mc, pc = _cfgs(pipeline)
+    d = str(tmp_path)
+    train_pipegcn(pipeline, mc, pc, epochs=8, eval_every=4,
+                  ckpt_dir=d, checkpoint_every=2, checkpoint_keep=2)
+    names = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert names == ["step_00000006", "step_00000008"]
+
+
+# ---------------------------------------------------------------------------
+# graceful preemption (SIGTERM/SIGINT)
+# ---------------------------------------------------------------------------
+
+def test_sigterm_finishes_epoch_checkpoints_and_resumes_bitwise(
+        tmp_path, pipeline):
+    """SIGTERM mid-run: the in-flight epoch completes, a final checkpoint
+    lands, the result is flagged `preempted` — and resuming reproduces the
+    uninterrupted run bitwise. The signal is raised from the `log`
+    callback after a fixed number of epoch lines, so delivery is
+    deterministic (handled on the next loop iteration's bytecode)."""
+    import signal
+    mc, pc = _cfgs(pipeline, guard_exchange=True)
+    full = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=1)
+    seen = {"epochs": 0}
+
+    def kill_after_three(line):
+        if line.startswith("epoch "):
+            seen["epochs"] += 1
+            if seen["epochs"] == 3:
+                os.kill(os.getpid(), signal.SIGTERM)
+
+    d = str(tmp_path)
+    res = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=1,
+                        log=kill_after_three, ckpt_dir=d,
+                        checkpoint_every=100)
+    assert res.preempted
+    assert res.history["epoch"] == [0, 1, 2]
+    assert latest_step(d) == 3          # final checkpoint despite every=100
+    # the process-level handler was restored, not left pointing at the
+    # trainer's accumulator
+    assert signal.getsignal(signal.SIGTERM) is not None
+    res2 = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=1,
+                         ckpt_dir=d, checkpoint_every=100, resume=True)
+    assert res2.resumed_from == 3 and not res2.preempted
+    for a, b in zip(jax.tree.leaves(res2.params),
+                    jax.tree.leaves(full.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert res2.final_metrics == full.final_metrics
+
+
+def test_sigint_without_checkpointing_still_exits_cleanly(tmp_path, pipeline):
+    """Preemption with no ckpt_dir configured: no crash, clean early
+    return with preempted=True and the completed-epoch history."""
+    import signal
+    mc, pc = _cfgs(pipeline)
+    seen = {"epochs": 0}
+
+    def kill_after_two(line):
+        if line.startswith("epoch "):
+            seen["epochs"] += 1
+            if seen["epochs"] == 2:
+                os.kill(os.getpid(), signal.SIGINT)
+
+    res = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=1,
+                        log=kill_after_two)
+    assert res.preempted
+    assert res.history["epoch"] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
 # real PipeGCN state round-trips
 # ---------------------------------------------------------------------------
 

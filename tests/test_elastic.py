@@ -1,0 +1,478 @@
+"""Elastic runtime: survivor-remapped partitions + staleness-escalated
+recovery (ISSUE 10).
+
+The load-bearing guarantee is the BITWISE gate: after a device loss the
+trainer restores the last checkpoint, remaps the lost device's partitions
+onto the survivors, and from that point on produces exactly the floats a
+fresh launch at the smaller device count produces from the same
+checkpoint — recovery is a re-sharding, never a numerical event. The
+zero-fault identity pins the other direction: an armed elastic runtime
+that never fires is bitwise invisible.
+
+Property tests (hypothesis, or the fixed-seed sweep shim) pin the plan
+algebra: every real partition is hosted exactly once for ARBITRARY
+survivor subsets, and remap → unmap round-trips data and pipeline buffers
+bitwise. The SPMD drill lives in a subprocess so only it sees forced host
+devices.
+"""
+import dataclasses
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (DeviceLossError, ElasticConfig, ElasticPlan,
+                        FaultPlan, ModelConfig, PipeConfig, device_down_site)
+from repro.core.elastic import (detect_device_loss, mask_pad_faults,
+                                remap_buffers, remap_data, remap_topology,
+                                unmap_buffers, unmap_data, unmap_topology,
+                                warm_mark)
+from repro.core.faults import FWD
+from repro.core.pipegcn import PipeGCN
+from repro.core.trainer import train_pipegcn
+from repro.data import GraphDataPipeline
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    return GraphDataPipeline.build("tiny", P, seed=0)
+
+
+def _cfgs(pipeline, **pipe_kw):
+    ds = pipeline.dataset
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes, dropout=0.0)
+    pipe_kw.setdefault("guard_exchange", True)
+    pipe_kw.setdefault("max_staleness", 8)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"), **pipe_kw)
+    return mc, pc
+
+
+def _bitwise(a_tree, b_tree):
+    la, lb = jax.tree.leaves(a_tree), jax.tree.leaves(b_tree)
+    assert len(la) == len(lb)
+    return all(bool((np.asarray(a) == np.asarray(b)).all())
+               for a, b in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# plan algebra (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(n_local=st.sampled_from([1, 2, 4]),
+       orig=st.integers(min_value=2, max_value=5),
+       mask=st.integers(min_value=1, max_value=31))
+def test_plan_covers_every_partition_exactly_once(n_local, orig, mask):
+    """Whatever subset of devices survives, the plan's device-major
+    assignment hosts every REAL partition exactly once, pads fill the
+    remainder, and all-survive is the identity plan."""
+    survivors = tuple(d for d in range(orig) if (mask >> d) & 1) or (0,)
+    plan = ElasticPlan(num_parts=orig * n_local, orig_devices=orig,
+                       survivors=survivors)
+    hosted = [p for dev in plan.assignment() for p in dev]
+    assert sorted(hosted) == list(range(plan.num_parts))      # exactly once
+    assert len(plan.assignment()) == plan.n_devices
+    assert all(len(dev) <= plan.n_local for dev in plan.assignment())
+    assert plan.padded_parts == plan.n_devices * plan.n_local
+    assert 0 <= plan.pad_parts < plan.n_devices
+    assert plan.moved_partitions() <= set(range(plan.num_parts))
+    assert set(plan.lost) | set(plan.survivors) == set(range(orig))
+    if len(plan.survivors) == orig:
+        assert plan.pad_parts == 0
+        assert not plan.moved_partitions()
+
+
+@settings(max_examples=25)
+@given(n_local=st.sampled_from([1, 2, 4]),
+       orig=st.integers(min_value=2, max_value=4),
+       mask=st.integers(min_value=1, max_value=15),
+       k=st.sampled_from([0, 2]))
+def test_remap_unmap_roundtrip_buffers_and_data(n_local, orig, mask, k):
+    """remap → unmap is bitwise identity on synthetic buffers shaped like
+    the pipeline state ((k?, P, P*slot, w) feat / (k?, P, m, w) grad /
+    (P,2,L,P) es) and on leading-partition data arrays — for arbitrary
+    survivor subsets and FIFO depths."""
+    survivors = tuple(d for d in range(orig) if (mask >> d) & 1) or (0,)
+    num_parts = orig * n_local
+    plan = ElasticPlan(num_parts=num_parts, orig_devices=orig,
+                       survivors=survivors)
+    rng = np.random.default_rng(num_parts * 131 + mask)
+    slot, w, L, m = 3, 5, 2, 6
+    lead = (k,) if k else ()
+    bufs = {
+        "feat": tuple(jnp.asarray(rng.normal(
+            size=lead + (num_parts, num_parts * slot, w))) for _ in range(L)),
+        "grad": tuple(jnp.asarray(rng.normal(
+            size=lead + (num_parts, m, w))) for _ in range(L)),
+        "es": jnp.asarray(rng.integers(
+            0, 3, size=(num_parts, 2, L, num_parts)), dtype=jnp.int32),
+    }
+    rb = remap_buffers(bufs, plan)
+    assert rb["feat"][0].shape[-3] == plan.padded_parts
+    assert rb["feat"][0].shape[-2] == plan.padded_parts * slot
+    assert rb["es"].shape == (plan.padded_parts, 2, L, plan.padded_parts)
+    assert _bitwise(unmap_buffers(rb, plan), bufs)
+    data = {"x": jnp.asarray(rng.normal(size=(num_parts, m, w)))}
+    assert _bitwise(jax.tree.map(lambda a: a[:num_parts],
+                                 remap_data(data, plan)), data)
+
+
+def test_plan_validates(pipeline):
+    with pytest.raises(ValueError, match="multiple"):
+        ElasticPlan(num_parts=4, orig_devices=3, survivors=(0,))
+    with pytest.raises(ValueError, match="empty"):
+        ElasticPlan(num_parts=4, orig_devices=4, survivors=())
+    with pytest.raises(ValueError, match="out of range"):
+        ElasticPlan(num_parts=4, orig_devices=4, survivors=(0, 7))
+    # survivors are sorted + deduped
+    plan = ElasticPlan(num_parts=4, orig_devices=4, survivors=(3, 0, 2, 2))
+    assert plan.survivors == (0, 2, 3)
+    assert plan.lost == (1,)
+    assert plan.n_local == 2 and plan.padded_parts == 6 and plan.pad_parts == 2
+    assert plan.assignment() == ((0, 1), (2, 3), ())
+
+
+def test_elastic_config_validates():
+    with pytest.raises(ValueError, match="detect_after"):
+        ElasticConfig(detect_after=0)
+    with pytest.raises(ValueError, match="warm_staleness"):
+        ElasticConfig(detect_after=2, warm_staleness=2)
+    with pytest.raises(ValueError, match="max_recoveries"):
+        ElasticConfig(max_recoveries=-1)
+
+
+# ---------------------------------------------------------------------------
+# topology / pipeline-state remap on the real graph
+# ---------------------------------------------------------------------------
+
+def test_topology_remap_roundtrip_and_masks(pipeline):
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    topo = pipeline.topo
+    rt = remap_topology(topo, plan)
+    assert rt.num_parts == plan.padded_parts
+    assert rt.send_idx.shape[:2] == (plan.padded_parts, plan.padded_parts)
+    # pads are idle: no sends, no inner nodes
+    assert not np.asarray(rt.send_mask)[P:].any()
+    assert not np.asarray(rt.send_mask)[:, P:].any()
+    assert not np.asarray(rt.inner_mask)[P:].any()
+    assert _bitwise(tuple(x for x in unmap_topology(rt, plan) if x is not None),
+                    tuple(x for x in topo if x is not None))
+    # data round-trip + pads contribute no labelled nodes
+    rd = remap_data(pipeline.train_data, plan)
+    assert not np.asarray(rd.train_mask)[P:].any()
+    assert _bitwise(unmap_data(rd, plan), pipeline.train_data)
+
+
+def test_buffer_remap_matches_padded_init(pipeline):
+    """remap_buffers(init(flat topo)) must shape-match init(remapped topo):
+    the trainer builds one and restores into the other."""
+    mc, pc = _cfgs(pipeline, staleness_steps=2)
+    model = PipeGCN(mc, pc)
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    flat = model.init_buffers(pipeline.topo)
+    padded = model.init_buffers(remap_topology(pipeline.topo, plan))
+    got = remap_buffers(flat, plan)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(padded)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert _bitwise(unmap_buffers(got, plan), flat)
+
+
+def test_warm_mark_touches_moved_rows_only():
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    moved = plan.moved_partitions()
+    assert moved                       # the lost device's partition moved
+    L = 3
+    es = jnp.zeros((plan.padded_parts, 2, L, plan.padded_parts), jnp.int32)
+    es = es.at[0, FWD, 0, 2].set(5)    # pre-existing deeper streak survives
+    out = warm_mark({"es": es, "feat": (), "grad": ()}, moved, 1, P)["es"]
+    out = np.array(out)
+    assert out[0, FWD, 0, 2] == 5      # maximum, not overwrite
+    out[0, FWD, 0, 2] = 0              # exclude it from the block checks
+    for dst in range(plan.padded_parts):
+        for src in range(plan.padded_parts):
+            touched = ((dst in moved or src in moved)
+                       and dst < P and src < P)
+            assert (out[dst, :, :, src] == (1 if touched else 0)).all()
+    # warm=0 and empty moved are no-ops
+    bufs = {"es": es, "feat": (), "grad": ()}
+    assert warm_mark(bufs, moved, 0, P) is bufs
+    assert warm_mark(bufs, frozenset(), 1, P) is bufs
+
+
+# ---------------------------------------------------------------------------
+# detection
+# ---------------------------------------------------------------------------
+
+def test_detect_device_loss_whole_device_only():
+    L = 3
+    es = np.zeros((P, 2, L, P), np.int32)
+    assert detect_device_loss(es, 1, P, 2) is None
+    # scattered single-pair fault: never a device loss
+    es[0, FWD, :, 1] = 9
+    assert detect_device_loss(es, 1, P, 2) is None
+    # every off-device forward dst hits the threshold -> device 1 down
+    for dst in range(P):
+        if dst != 1:
+            es[dst, FWD, :, 1] = 2
+    assert detect_device_loss(es, 1, P, 2) == 1
+    # one healthy layer on one dst keeps it alive (min over the block)
+    es[2, FWD, 1, 1] = 1
+    assert detect_device_loss(es, 1, P, 2) is None
+
+
+def test_detect_device_loss_multilocal_and_pads():
+    """n_local=2 on a padded (6-part) layout: only real partitions count,
+    and BOTH of a device's partitions must be blanketed."""
+    L, pp = 2, 6       # plan (0,2,3) of P=4: pads 4,5 on survivor 2
+    es = np.zeros((pp, 2, L, pp), np.int32)
+    # survivor 0 hosts parts (0,1); its dsts are real parts 2,3
+    es[2:4, FWD, :, 0] = 3
+    assert detect_device_loss(es, 2, P, 2) is None     # part 1 still healthy
+    es[2:4, FWD, :, 1] = 3
+    assert detect_device_loss(es, 2, P, 2) == 0
+    # backward-only streaks never trip detection
+    es2 = np.zeros((pp, 2, L, pp), np.int32)
+    es2[:, 1 - FWD] = 9
+    assert detect_device_loss(es2, 2, P, 2) is None
+
+
+# ---------------------------------------------------------------------------
+# device_down fault compilation
+# ---------------------------------------------------------------------------
+
+def test_device_down_compiles_outbound_cross_device_window():
+    plan_f = FaultPlan(sites=(device_down_site(step=2, device=1, until=4),))
+    tab = plan_f.compile(6, 2, P, parts_per_device=2)   # 2 devices
+    drop = np.asarray(tab.drop)
+    on = np.zeros(P, bool)
+    on[2:4] = True                                      # device 1's block
+    want = np.outer(on, ~on)
+    for t in range(6):
+        if 2 <= t < 4:
+            assert (drop[t] == want[None]).all()        # outbound only
+        else:
+            assert not drop[t].any()
+    assert not np.asarray(tab.corrupt).any()
+    assert plan_f.downed_devices(2) == frozenset({1})
+    assert plan_f.downed_devices(4) == frozenset()
+    assert plan_f.without_device_down().is_empty()
+
+
+def test_device_down_site_validates():
+    with pytest.raises(ValueError, match="until"):
+        device_down_site(step=5, device=0, until=5)
+    plan_f = FaultPlan(sites=(device_down_site(step=0, device=7),))
+    with pytest.raises(ValueError, match="device"):
+        plan_f.compile(4, 2, P, parts_per_device=1)
+
+
+def test_mask_pad_faults_zeroes_pad_rows():
+    plan_f = FaultPlan(sites=(device_down_site(step=0, device=1),))
+    tab = mask_pad_faults(plan_f.compile(2, 2, 6, parts_per_device=2), P)
+    drop = np.asarray(tab.drop)
+    assert not drop[..., P:, :].any() and not drop[..., :, P:].any()
+    assert drop[..., :P, :P].any()     # real sites survive the mask
+
+
+# ---------------------------------------------------------------------------
+# the drill: loss -> remap -> bitwise-identical recovery (sim backend)
+# ---------------------------------------------------------------------------
+
+EC = ElasticConfig(parts_per_device=1, rejoin=False)
+
+
+def _drill_runs(pipeline, tmp_path):
+    mc, pc = _cfgs(pipeline)
+    plan_f = FaultPlan(sites=(device_down_site(step=5, device=1),))
+    d_a = str(tmp_path / "a")
+    res_a = train_pipegcn(pipeline, mc, pc, epochs=12, eval_every=1,
+                          elastic=EC, faults=plan_f, ckpt_dir=d_a,
+                          checkpoint_every=4)
+    assert res_a.recoveries == 1
+    loss = res_a.anomalies["device_losses"][0]
+    assert loss["device"] == 1 and loss["survivors"] == [0, 2, 3]
+    assert loss["resumed_from"] == 4
+    # downtime bound: detection lands within detect_after steps of the kill
+    assert loss["detected_epoch"] <= 5 + EC.detect_after
+    # fresh survivor-layout launch from the SAME checkpoint
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    d_b = str(tmp_path / "b")
+    os.makedirs(d_b)
+    shutil.copytree(os.path.join(d_a, "step_00000004"),
+                    os.path.join(d_b, "step_00000004"))
+    res_b = train_pipegcn(pipeline, mc, pc, epochs=12, eval_every=1,
+                          elastic=EC, elastic_plan=plan, ckpt_dir=d_b,
+                          checkpoint_every=4, resume=True)
+    return res_a, res_b
+
+
+def test_sim_recovery_bitwise_equals_fresh_shrunk_run(pipeline, tmp_path):
+    """THE gate: a mid-run recovery (restore + remap + warm-mark) and a
+    fresh launch on the survivor layout from the same checkpoint produce
+    bitwise-identical params and per-epoch histories."""
+    res_a, res_b = _drill_runs(pipeline, tmp_path)
+    assert _bitwise(res_a.params, res_b.params)
+    ep = res_b.history["epoch"]
+    for k in ("loss", "val_acc", "test_acc"):
+        tail_a = [res_a.history[k][res_a.history["epoch"].index(e)]
+                  for e in ep]
+        assert tail_a == res_b.history[k]
+    assert res_b.recoveries == 0 and res_b.resumed_from == 4
+
+
+def test_zero_fault_elastic_is_bitwise_invisible(pipeline):
+    """Armed-but-idle elasticity must not perturb a single bit."""
+    mc, pc = _cfgs(pipeline)
+    plain = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=2)
+    armed = train_pipegcn(pipeline, mc, pc, epochs=6, eval_every=2,
+                          elastic=EC)
+    assert armed.recoveries == 0
+    assert not armed.anomalies["device_losses"]
+    assert _bitwise(plain.params, armed.params)
+    assert plain.history == armed.history
+
+
+def test_rejoin_scales_back_up_at_checkpoint(pipeline, tmp_path):
+    """Bounded outage: device 2 down for steps [5, 9) -> recovery at the
+    detection epoch, rejoin at the first checkpoint boundary after the
+    device returns, run finishes on the full layout."""
+    mc, pc = _cfgs(pipeline)
+    ec = ElasticConfig(parts_per_device=1, rejoin=True)
+    plan_f = FaultPlan(sites=(device_down_site(step=5, device=2, until=9),))
+    res = train_pipegcn(pipeline, mc, pc, epochs=16, eval_every=2,
+                        elastic=ec, faults=plan_f,
+                        ckpt_dir=str(tmp_path), checkpoint_every=4)
+    assert res.recoveries == 1
+    assert res.anomalies["rejoins"] == 1
+    assert res.final_metrics["val"] > 0.5
+
+
+def test_recovery_budget_reraises(pipeline, tmp_path):
+    """max_recoveries=0: the loss surfaces as DeviceLossError (still a
+    StalenessExceededError) instead of recovering."""
+    mc, pc = _cfgs(pipeline)
+    ec = ElasticConfig(parts_per_device=1, max_recoveries=0)
+    plan_f = FaultPlan(sites=(device_down_site(step=3, device=1),))
+    with pytest.raises(DeviceLossError) as e:
+        train_pipegcn(pipeline, mc, pc, epochs=8, eval_every=4,
+                      elastic=ec, faults=plan_f,
+                      ckpt_dir=str(tmp_path), checkpoint_every=2)
+    assert e.value.device == 1 and e.value.survivors == (0, 2, 3)
+
+
+def test_loss_before_first_checkpoint_is_fatal(pipeline, tmp_path):
+    mc, pc = _cfgs(pipeline)
+    plan_f = FaultPlan(sites=(device_down_site(step=0, device=1),))
+    with pytest.raises(RuntimeError, match="first checkpoint"):
+        train_pipegcn(pipeline, mc, pc, epochs=8, eval_every=4,
+                      elastic=EC, faults=plan_f,
+                      ckpt_dir=str(tmp_path), checkpoint_every=100)
+
+
+def test_elastic_requires_guarded_exchange(pipeline):
+    mc, pc = _cfgs(pipeline, guard_exchange=False)
+    with pytest.raises(ValueError, match="guard_exchange"):
+        train_pipegcn(pipeline, mc, pc, epochs=1, elastic=EC)
+
+
+def test_plan_requires_enabled_elastic(pipeline):
+    mc, pc = _cfgs(pipeline)
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    with pytest.raises(ValueError, match="ElasticConfig"):
+        train_pipegcn(pipeline, mc, pc, epochs=1, elastic_plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# collective counts on the shrunk layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_remapped_step_collective_count(pipeline, fused):
+    """The padded survivor layout issues exactly the boundary collectives
+    the comm model prices — pads add zero collectives (they ride the same
+    all_to_all slots, masked)."""
+    from repro.core.trace_utils import (expected_boundary_collectives,
+                                        traced_step_collectives)
+    from repro.launch.mesh import make_partition_mesh
+    mc, pc = _cfgs(pipeline, fuse_exchange=fused)
+    model = PipeGCN(mc, pc)
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    topo_r, train_r, _ = pipeline.elastic_views(plan)
+    mesh = make_partition_mesh(plan.padded_parts,
+                               parts_per_device=plan.padded_parts)
+    got = traced_step_collectives(model, mesh, topo_r, train_r, train=True)
+    want = expected_boundary_collectives(mc.num_layers, fused, train=True)
+    assert got["all_to_all"] == want, (got, want)
+
+
+# ---------------------------------------------------------------------------
+# SPMD drill (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses, shutil, tempfile
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import (ElasticConfig, ElasticPlan, FaultPlan,
+                            ModelConfig, PipeConfig, device_down_site)
+    from repro.core.trainer import train_pipegcn
+    from repro.data import GraphDataPipeline
+    from repro.launch.mesh import make_partition_mesh, make_survivor_mesh
+
+    P = 4
+    pipeline = GraphDataPipeline.build("tiny", P, kind="sage")
+    ds = pipeline.dataset
+    mc = ModelConfig(kind="sage", feat_dim=ds.feat_dim, hidden=16,
+                     num_layers=3, num_classes=ds.num_classes, dropout=0.0)
+    pc = dataclasses.replace(PipeConfig.named("pipegcn"),
+                             guard_exchange=True, max_staleness=8)
+    ec = ElasticConfig(parts_per_device=1, rejoin=False)
+    plan_f = FaultPlan(sites=(device_down_site(step=3, device=1),))
+    d_a = tempfile.mkdtemp()
+    res_a = train_pipegcn(pipeline, mc, pc, epochs=8, eval_every=1,
+                          mesh=make_partition_mesh(P, 1), elastic=ec,
+                          faults=plan_f, ckpt_dir=d_a, checkpoint_every=2)
+    assert res_a.recoveries == 1, res_a.recoveries
+    loss = res_a.anomalies["device_losses"][0]
+    assert loss["device"] == 1 and loss["survivors"] == [0, 2, 3], loss
+    plan = ElasticPlan(num_parts=P, orig_devices=P, survivors=(0, 2, 3))
+    d_b = tempfile.mkdtemp()
+    step_dir = "step_%08d" % loss["resumed_from"]
+    shutil.copytree(os.path.join(d_a, step_dir), os.path.join(d_b, step_dir))
+    res_b = train_pipegcn(pipeline, mc, pc, epochs=8, eval_every=1,
+                          mesh=make_survivor_mesh(plan), elastic=ec,
+                          elastic_plan=plan, ckpt_dir=d_b,
+                          checkpoint_every=2, resume=True)
+    same = all(bool((a == b).all()) for a, b in
+               zip(jax.tree.leaves(res_a.params),
+                   jax.tree.leaves(res_b.params)))
+    assert same, "post-remap SPMD params != fresh shrunk-mesh run"
+    assert res_a.history["loss"][-len(res_b.history["loss"]):] \\
+        == res_b.history["loss"]
+    print("SPMD_ELASTIC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_spmd_elastic_drill_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SPMD_ELASTIC_OK" in proc.stdout
